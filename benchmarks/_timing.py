@@ -1,0 +1,36 @@
+"""Shared timing + device-bootstrap helpers for the benchmark harness.
+
+The harness is its own process entry point and configures 8 CPU devices for
+real multi-device collective timing (never the dry-run's fake 512).
+"""
+import os
+import time
+
+
+def ensure_devices(n: int = 8):
+    if "XLA_FLAGS" not in os.environ or "device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} "
+            + os.environ.get("XLA_FLAGS", ""))
+    import jax
+    assert len(jax.devices()) >= n, (
+        "benchmarks must be launched fresh (jax already initialized with "
+        f"{len(jax.devices())} devices)")
+
+
+def bench(fn, *, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,25 @@
+"""Application benchmarks: paper Fig. 13/15 -- the five workloads with
+conventional (naive) vs PID-Comm collectives end-to-end."""
+from __future__ import annotations
+
+from benchmarks._timing import bench, emit
+
+
+def run():
+    from repro.apps.paper_apps import APPS
+    from repro.core.hypercube import Hypercube
+    from repro.launch.mesh import make_mesh
+
+    for name, (make, ndims) in APPS.items():
+        shape = {1: (8,), 2: (4, 2), 3: (2, 2, 2)}[ndims]
+        names = ("x", "y", "z")[: ndims]
+        mesh = make_mesh(shape, names)
+        cube = Hypercube.build(mesh, dict(zip(names, shape)))
+        naive_us = None
+        for alg in ("naive", "pidcomm"):
+            fn = make(cube, algorithm=alg)
+            us = bench(fn, warmup=1, reps=3)
+            if alg == "naive":
+                naive_us = us
+            emit(f"fig15/{name}/{alg}", us,
+                 f"speedup_vs_naive={naive_us/us:.2f}" if naive_us else "")

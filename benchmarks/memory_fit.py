@@ -1,0 +1,90 @@
+"""Analytic per-chip HBM working-set estimates (v5e: 16 GB).
+
+XLA-CPU's ``memory_analysis().temp_size_in_bytes`` over-approximates the
+device peak: unrolled per-layer transients are not buffer-shared the way the
+TPU compiler schedules them (verified with a micro-benchmark: N checkpointed
+layers report ~N x one layer's transients). This module derives the
+first-principles working set the TPU scheduler actually needs, per cell, and
+is reported next to the XLA upper bound in EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import json
+import glob
+import os
+
+HBM = 16 * 2**30
+
+
+def train_fit(cfg, chips: int, pods: int, gb: int, seq: int) -> dict:
+    P = cfg.param_count()
+    mp = cfg.model_parallel
+    per_pod = chips // pods
+    dp = per_pod // mp
+    B_l = gb // (dp * pods)
+    L = cfg.n_layers
+    D = cfg.d_model
+    state = P * 4 / (per_pod) + P * 2.1 / per_pod          # master + 8bit m,v
+    grads = P * 2 / per_pod
+    # largest single layer's gathered bf16 weights per chip
+    per_layer = P / L
+    gathered = 3 * per_layer * 2 / mp                      # fwd + bwd + grad
+    resid = L * B_l * (seq // mp) * D * 2                  # saved x_sp
+    act = 8 * B_l * seq * D * 2                            # one layer live
+    ce = 2 * B_l * 512 * (cfg.vocab_size // mp) * 4
+    total = state + grads + gathered + resid + act + ce
+    return {"state": state, "grads": grads, "gathered": gathered,
+            "residuals": resid, "activations": act, "ce": ce,
+            "total_gib": total / 2**30, "fits": total < HBM}
+
+
+def decode_fit(cfg, chips: int, pods: int, gb: int, seq: int) -> dict:
+    from repro.models.config import ATTN
+    P = cfg.param_count()
+    per_pod = chips // pods
+    mp = per_pod if not cfg.serve_tp else min(per_pod, cfg.serve_tp)
+    params = P * 4 / per_pod + P * 2 / mp / 8              # stored + gathered/8
+    n_attn = sum(1 for m in cfg.mixers() if m == ATTN)
+    wins = cfg.windows()
+    s_cache = seq
+    if (wins >= 0).all() and len(set(wins.tolist())) == 1:
+        s_cache = min(seq, int(wins[0]))
+    B = max(gb // pods, 1)
+    cache = n_attn * B * s_cache * cfg.n_kv_heads * cfg.head_dim * 2 * 2 / mp
+    total = params + cache * 1.5
+    return {"params": params, "cache": cache, "total_gib": total / 2**30,
+            "fits": total < HBM}
+
+
+def table(root="results/dryrun"):
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro import configs
+    rows = ["| arch | shape | mesh | XLA-CPU temp GiB (upper bound) | "
+            "analytic working set GiB | fits 16 GB |",
+            "|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(root, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        cfg = configs.get(rec["arch"])
+        chips = 512 if rec["mesh"] == "2x16x16" else 256
+        pods = 2 if chips == 512 else 1
+        if rec["shape"] == "train_4k":
+            fit = train_fit(cfg, chips, pods, 256, 4096)
+        elif rec["shape"] == "prefill_32k":
+            fit = train_fit(cfg, chips, pods, 32, 32768)
+            fit["total_gib"] *= 0.5                        # no grads/residual
+        elif rec["shape"] == "decode_32k":
+            fit = decode_fit(cfg, chips, pods, 128, 32768)
+        else:
+            fit = decode_fit(cfg, chips, pods, 1, 524288)
+        xla = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30
+        rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                    f"{xla:.1f} | {fit['total_gib']:.1f} | "
+                    f"{'yes' if fit['total_gib'] < 16 else 'NO'} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,177 @@
+"""Primitive-level benchmarks: paper Fig. 14 (throughput baseline vs
+PID-Comm), Fig. 16 (ablation naive -> +PR -> +IM -> +CM), Fig. 18 (data
+size), Fig. 19 (device count), Fig. 20 (hypercube shapes), Fig. 23(a)
+(ring / tree / hypercube) and 23(b) (hierarchical multi-pod).
+
+Throughput convention follows the paper (§VIII-B): payload = the larger side
+of the exchanged data divided by wall time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._timing import bench, emit
+
+
+def _setup(shape, names):
+    import jax
+    import jax.numpy as jnp
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.hypercube import Hypercube
+    from repro.core.collectives import Collectives
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(shape, names)
+    cube = Hypercube.build(mesh, dict(zip(names, shape)))
+    return cube, Collectives(cube)
+
+
+def _smap_call(cube, f, in_specs, out_specs, *args):
+    import jax
+    from jax import shard_map
+    fn = jax.jit(shard_map(f, mesh=cube.mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False))
+    return lambda: jax.block_until_ready(fn(*args))
+
+
+def fig14_fig16_primitives(size_kb: int = 512):
+    """8 primitives x every applicable algorithm stage on an 8-device dim."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collectives import APPLICABILITY
+    cube, col = _setup((8,), ("d",))
+    n = size_kb * 1024 // 4
+    g = 8
+    x = jnp.ones((g, n), jnp.float32)
+
+    cases = {
+        "all_reduce": lambda alg: _smap_call(
+            cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+            (P("d", None),), P(None, None), x),
+        "reduce_scatter": lambda alg: _smap_call(
+            cube, lambda v: col.reduce_scatter(v, "d", axis=1, algorithm=alg),
+            (P("d", None),), P("d", None), x),
+        "all_gather": lambda alg: _smap_call(
+            cube, lambda v: col.all_gather(v, "d", axis=0, algorithm=alg),
+            (P("d", None),), P(None, None), x),
+        "all_to_all": lambda alg: _smap_call(
+            cube, lambda v: col.all_to_all(v, "d", split_axis=1,
+                                           concat_axis=1, algorithm=alg),
+            (P("d", None),), P("d", None), x),
+    }
+    payload = g * n * 4
+    for prim, make in cases.items():
+        base_us = None
+        for alg in APPLICABILITY[prim] + ("pidcomm",):
+            us = bench(make(alg))
+            if alg == "naive":
+                base_us = us
+            gbps = payload / (us * 1e-6) / 1e9
+            speedup = base_us / us if base_us else 1.0
+            emit(f"fig14_16/{prim}/{alg}", us,
+                 f"GBps={gbps:.2f};speedup_vs_naive={speedup:.2f}")
+
+    # rooted primitives (host <-> PE path, jit-boundary timing)
+    import jax
+    host = np.ones((g, n), np.float32)
+    dev = col.scatter(host, ("d",), axis=0)
+    emit("fig14/scatter/pidcomm",
+         bench(lambda: jax.block_until_ready(
+             col.scatter(host, ("d",), axis=0))), "")
+    emit("fig14/gather/pidcomm", bench(lambda: col.gather(dev)), "")
+    emit("fig14/broadcast/pidcomm",
+         bench(lambda: jax.block_until_ready(col.broadcast(host))), "")
+    emit("fig14/reduce/pidcomm", bench(lambda: col.reduce(dev)), "")
+
+
+def fig18_size_sweep():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    cube, col = _setup((8,), ("d",))
+    for kb in (128, 512, 2048, 8192):
+        n = kb * 1024 // 4
+        x = jnp.ones((8, n), jnp.float32)
+        for alg in ("naive", "pidcomm"):
+            fn = _smap_call(
+                cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+                (P("d", None),), P(None, None), x)
+            us = bench(fn)
+            emit(f"fig18/all_reduce/{kb}KB/{alg}", us,
+                 f"GBps={8*n*4/(us*1e-6)/1e9:.2f}")
+
+
+def fig19_device_sweep():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    for nd in (2, 4, 8):
+        cube, col = _setup((nd,), ("d",))
+        n = 512 * 1024 // 4
+        x = jnp.ones((nd, n), jnp.float32)
+        for alg in ("naive", "pidcomm"):
+            fn = _smap_call(
+                cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+                (P("d", None),), P(None, None), x)
+            us = bench(fn)
+            emit(f"fig19/all_reduce/{nd}dev/{alg}", us,
+                 f"GBps={nd*n*4/(us*1e-6)/1e9:.2f}")
+
+
+def fig20_cube_shapes():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    n = 256 * 1024 // 4
+    for shape in ((8,), (4, 2), (2, 2, 2)):
+        names = ("x", "y", "z")[: len(shape)]
+        cube, col = _setup(shape, names)
+        x = jnp.ones((8, n), jnp.float32)
+        fn = _smap_call(
+            cube, lambda v: col.all_to_all(v, names, split_axis=1,
+                                           concat_axis=1),
+            (P(names, None),), P(names, None), x)
+        us = bench(fn)
+        tag = "x".join(str(s) for s in shape)
+        emit(f"fig20/all_to_all/{tag}", us,
+             f"GBps={8*n*4/(us*1e-6)/1e9:.2f}")
+
+
+def fig23_topologies():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collectives import ring_all_reduce, tree_all_reduce
+    cube, col = _setup((8,), ("d",))
+    n = 512 * 1024 // 4
+    x = jnp.ones((8, n), jnp.float32)
+    fns = {
+        "hypercube": lambda v: col.all_reduce(v, "d"),
+        "ring": lambda v: ring_all_reduce(v[0], cube, "d")[None],
+        "tree": lambda v: tree_all_reduce(v, cube, "d"),
+    }
+    for name, f in fns.items():
+        fn = _smap_call(cube, f, (P("d", None),), P(None, None), x)
+        us = bench(fn)
+        emit(f"fig23a/all_reduce/{name}", us,
+             f"GBps={8*n*4/(us*1e-6)/1e9:.2f}")
+
+    # 23(b): hierarchical multi-pod AR (pod axis = DCN domain)
+    from repro.core.hypercube import Hypercube
+    from repro.core.collectives import Collectives
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cube2 = Hypercube.build(mesh, {"pod": 2, "dp": 2, "tp": 2})
+    col2 = Collectives(cube2)
+    x2 = jnp.ones((8, n), jnp.float32)
+    for alg, tag in (("naive", "flat-naive"), ("pr", "flat-gathered"),
+                     ("pidcomm", "hierarchical")):
+        fn = _smap_call(
+            cube2, lambda v: col2.all_reduce(v, ("pod", "dp"), algorithm=alg),
+            (P(("pod", "dp"), None),), P(None, None), x2)
+        us = bench(fn)
+        emit(f"fig23b/pod_all_reduce/{tag}", us, "")
+
+
+def run():
+    fig14_fig16_primitives()
+    fig18_size_sweep()
+    fig19_device_sweep()
+    fig20_cube_shapes()
+    fig23_topologies()

@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh): the three terms
+  compute    = HLO_FLOPs_per_chip / 197 TF/s
+  memory     = HLO_bytes_per_chip / 819 GB/s
+  collective = wire_bytes_per_chip / link bandwidth
+with wire bytes derived from the parsed HLO collective schedule:
+  all-gather (g-1)/g x result | reduce-scatter (g-1) x result
+  all-reduce 2(g-1)/g x result | all-to-all (g-1)/g x result | permute 1x.
+
+MODEL_FLOPS uses 6*N_active*tokens (train) or 2*N_active*tokens (inference);
+the ratio MODEL/HLO catches remat and redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN = 3.125e9
+
+SHAPE_TOKENS = {  # global tokens processed per step
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+TRAIN_MULT = {"train_4k": 6, "prefill_32k": 2, "decode_32k": 2,
+              "long_500k": 2}
+
+
+def wire_bytes(collectives: dict) -> tuple[float, float]:
+    """(ici_bytes, dcn_bytes) per chip. Size-2 groups on the multipod mesh
+    are attributed to DCN (the pod axis; see caveat for etp=2 archs)."""
+    ici = dcn = 0.0
+    for op, d in collectives.items():
+        for gs, bucket in d.get("by_group", {}).items():
+            g = int(gs) or 1
+            b = bucket["bytes"]
+            if op == "all-gather":
+                w = b * (g - 1) / g
+            elif op == "reduce-scatter":
+                w = b * (g - 1)
+            elif op == "all-reduce":
+                w = 2 * b * (g - 1) / g
+            elif op == "all-to-all":
+                w = b * (g - 1) / g
+            else:  # collective-permute
+                w = b
+            ici += w
+    return ici, dcn
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    # prefer the scan-extrapolated probe costs (XLA counts loop bodies once)
+    cost = rec.get("cost_x") or rec["cost"]
+    colls = rec.get("collectives_x") or rec.get("collectives", {})
+    flops = cost.get("flops", 0.0)
+    mem_b = cost.get("bytes accessed", 0.0)
+    ici_b, dcn_b = wire_bytes(colls)
+    # pod-axis traffic on the multipod mesh: size-2 groups
+    pod_b = 0.0
+    if rec["mesh"] == "2x16x16":
+        for op, d in colls.items():
+            for gs, bucket in d.get("by_group", {}).items():
+                if int(gs) == 2:
+                    pod_b += bucket["bytes"]
+    t_c = flops / PEAK
+    t_m = mem_b / HBM
+    t_x = (ici_b - pod_b) / ICI + pod_b / DCN
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    model_flops = (TRAIN_MULT[rec["shape"]] * rec["params_active"] * tokens
+                   / chips)
+    step_time = max(t_c, t_m, t_x)
+    mfu = model_flops / PEAK / step_time if step_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "model_flops": model_flops, "hlo_flops": flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "roofline_frac": mfu,
+        "probed": "cost_x" in rec,
+        "temp_gib": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def load_all(root="results/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(root, "*.json"))):
+        rec = json.load(open(f))
+        a = analyse(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "dominant": "skipped"})
+    return out
+
+
+def markdown_table(rows, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck |"
+        " MODEL/HLO flops | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["dominant"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"skipped (full attention @500k) | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2%} | {r['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run():
+    from benchmarks._timing import emit
+    for r in load_all():
+        if r["dominant"] == "skipped":
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"bottleneck={r['dominant']};frac={r['roofline_frac']:.3f};"
+             f"useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(markdown_table(rows, "16x16"))
+    print()
+    print(markdown_table(rows, "2x16x16"))

@@ -1,0 +1,35 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Runs on 8 real CPU devices
+(its own process; never inherits the dry-run's fake 512).
+
+    PYTHONPATH=src python -m benchmarks.run [--only primitives|apps|roofline]
+"""
+import argparse
+import sys
+
+from benchmarks._timing import ensure_devices
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["primitives", "apps", "roofline"])
+    args = ap.parse_args()
+
+    ensure_devices(8)
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "primitives"):
+        from benchmarks import primitives
+        primitives.run()
+    if args.only in (None, "apps"):
+        from benchmarks import apps
+        apps.run()
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        roofline.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,11 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219; unverified]: 32L d3072 32H GQA(kv=32)
+d_ff 8192, vocab 32064, RoPE + SwiGLU."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab_size=32064,
+    rope_theta=1e4,
+    tp=16,
+)

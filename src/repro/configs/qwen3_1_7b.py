@@ -1,0 +1,11 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-*]: 28L d2048 16H GQA(kv=8) d_ff 6144,
+vocab 151936, qk_norm."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=6144, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6,
+    tp=16,
+)

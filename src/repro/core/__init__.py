@@ -1,0 +1,15 @@
+# PID-Comm core: virtual hypercube + eight multi-instance collective
+# primitives + planner + 8-bit DCN compression.
+from repro.core.hypercube import Hypercube
+from repro.core.collectives import (
+    Collectives, APPLICABILITY, ring_all_reduce, tree_all_reduce)
+from repro.core.planner import CommEstimate, estimate, plan
+from repro.core.compress import (
+    quantize_int8, dequantize_int8, compressed_pod_all_reduce)
+
+__all__ = [
+    "Hypercube", "Collectives", "APPLICABILITY",
+    "ring_all_reduce", "tree_all_reduce",
+    "CommEstimate", "estimate", "plan",
+    "quantize_int8", "dequantize_int8", "compressed_pod_all_reduce",
+]

@@ -1,0 +1,72 @@
+"""8-bit cross-domain modulation for the slow (DCN) hop (paper §V-C, §VIII-F).
+
+The paper observes that 8-bit payloads skip the domain-transfer step even for
+arithmetic primitives, yielding an extra 1.64x on GNNs. The TPU analogue:
+quantizing the gradient payload to int8 before it crosses the pod (DCN)
+boundary both shrinks the slow-domain bytes 2-4x and removes the bf16<->fp32
+conversion from the wire path. Error feedback keeps the optimizer contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.hypercube import Hypercube
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array, block: int = 256) -> tuple[Array, Array]:
+    """Blockwise absmax int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: Array, scale: Array, shape, size: int) -> Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[:size].reshape(shape)
+
+
+def compressed_pod_all_reduce(x: Array, cube: Hypercube, fast_dims, slow_dims,
+                              *, block: int = 256) -> tuple[Array, Array]:
+    """Hierarchical all-reduce with an int8 DCN hop + error feedback.
+
+    ICI: full-precision reduce-scatter (fast, cheap). DCN: int8 all-gather of
+    the 1/|ICI| shard + local dequant-sum. ICI: all-gather back.
+
+    Returns (all_reduced, local_quantization_error) -- callers add the error
+    into the next step's gradient (error feedback), preserving convergence.
+    """
+    fast = cube.resolve_dims(fast_dims)
+    slow = cube.resolve_dims(slow_dims)
+    gf = cube.group_size(fast)
+
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % (gf * block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shard = lax.psum_scatter(flat, fast, scatter_dimension=0, tiled=True)
+
+    q, scale = quantize_int8(shard, block)
+    deq_local = dequantize_int8(q, scale, shard.shape, shard.size)
+    err_shard = shard - deq_local  # local error, fed back by the caller
+
+    q_all = lax.all_gather(q, slow, axis=0, tiled=False)
+    s_all = lax.all_gather(scale, slow, axis=0, tiled=False)
+    summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    summed = summed.reshape(-1)[:shard.size].reshape(shard.shape)
+
+    full = lax.all_gather(summed, fast, axis=0, tiled=True)
+    err = lax.all_gather(err_shard, fast, axis=0, tiled=True)
+    if pad:
+        full = full[:-pad]
+        err = err[:-pad]
+    return full.reshape(x.shape), err.reshape(x.shape)

@@ -1,0 +1,190 @@
+"""Virtual hypercube abstraction (PID-Comm §IV) mapped onto a physical jax.Mesh.
+
+The paper abstracts PIM PEs as a user-defined N-dimensional hypercube whose
+nodes are transparently mapped to physical PEs following the DRAM hierarchy
+(chip -> bank -> rank -> channel), never splitting an *entangled group*
+(banks that must be driven together to saturate the external bus).
+
+On TPU the physical hierarchy is (core ->) chip -> ICI axis -> pod (DCN).
+``Hypercube`` re-views the devices of a physical mesh as a finer logical mesh
+in hierarchy-preserving order, and enforces the TPU analogue of the
+entangled-group rule: a logical dimension may never straddle the pod (DCN)
+boundary partially -- the pod boundary must coincide with a logical-dimension
+boundary, so every intra-pod collective group stays on ICI.
+
+Dimension sizes must be powers of two except the outermost (the paper allows
+one non-power-of-two dimension and requires it to sit at the slowest level of
+the hierarchy -- the channel count there, the pod count here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Physical axes that cross the data-center network (slow domain). Everything
+# else is assumed ICI (fast domain). Mirrors PIM-domain vs host-domain.
+DCN_AXES = ("pod",)
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Hypercube:
+    """A logical hypercube over the devices of a physical mesh.
+
+    Attributes:
+      mesh: logical ``jax.sharding.Mesh`` (axes ordered outermost->innermost).
+      dim_names: logical dimension names, outermost first.
+      dim_sizes: logical dimension sizes, outermost first.
+      physical_axes: the physical mesh axis names this was derived from.
+      dcn_dims: logical dims that live (partly) in the DCN domain.
+    """
+
+    mesh: Mesh
+    dim_names: tuple[str, ...]
+    dim_sizes: tuple[int, ...]
+    physical_axes: tuple[str, ...]
+    dcn_dims: tuple[str, ...]
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(physical_mesh: Mesh, dims: Mapping[str, int]) -> "Hypercube":
+        """Re-view ``physical_mesh`` as the logical hypercube ``dims``.
+
+        ``dims`` is ordered outermost -> innermost. The flattened device order
+        of the physical mesh (major -> minor) is preserved, which is exactly
+        the paper's hierarchy-order mapping (channel -> rank -> bank -> chip
+        there; pod -> ici-axis -> chip here).
+        """
+        names = tuple(dims.keys())
+        sizes = tuple(int(s) for s in dims.values())
+        ndev = int(np.prod(physical_mesh.devices.shape))
+        if int(np.prod(sizes)) != ndev:
+            raise ValueError(
+                f"hypercube {dict(dims)} has {int(np.prod(sizes))} nodes, "
+                f"physical mesh has {ndev} devices")
+        for name, size in zip(names[1:], sizes[1:]):
+            if not _is_pow2(size):
+                raise ValueError(
+                    f"dim {name!r}={size} must be a power of two (only the "
+                    "outermost dimension may be non-power-of-two)")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate dim names in {names}")
+
+        # Entangled-group rule: the DCN (pod) boundary must coincide with a
+        # logical dim boundary. devices_per_pod must equal the product of a
+        # suffix of the logical dims.
+        phys_names = tuple(physical_mesh.axis_names)
+        phys_sizes = physical_mesh.devices.shape
+        dcn_extent = 1
+        for pname, psize in zip(phys_names, phys_sizes):
+            if pname in DCN_AXES:
+                dcn_extent *= psize
+        devices_per_pod = ndev // dcn_extent
+        suffix = 1
+        suffixes = {1}
+        for s in reversed(sizes):
+            suffix *= s
+            suffixes.add(suffix)
+        if devices_per_pod not in suffixes:
+            raise ValueError(
+                f"hypercube {dict(dims)} splits the pod boundary "
+                f"({devices_per_pod} devices/pod is not a suffix product of "
+                f"{sizes}); intra-pod groups would straddle DCN")
+
+        # Which logical dims touch the DCN domain: those whose inner extent
+        # (product of strictly-inner dims) is >= devices_per_pod.
+        dcn_dims = []
+        inner = 1
+        for name, size in zip(reversed(names), reversed(sizes)):
+            if inner >= devices_per_pod and size > 1:
+                dcn_dims.append(name)
+            inner *= size
+        dcn_dims = tuple(reversed(dcn_dims))
+
+        devs = physical_mesh.devices.reshape(sizes)
+        logical = Mesh(devs, names)
+        return Hypercube(
+            mesh=logical,
+            dim_names=names,
+            dim_sizes=sizes,
+            physical_axes=phys_names,
+            dcn_dims=dcn_dims,
+        )
+
+    # ------------------------------------------------------------- selections
+    def dims_from_bitmap(self, bitmap: str) -> tuple[str, ...]:
+        """PID-Comm dim selection, e.g. "010" -> the middle dimension.
+
+        The bitmap is ordered like ``dim_names`` (outermost first), matching
+        the paper's ``comm_dimensions`` argument.
+        """
+        if len(bitmap) != len(self.dim_names) or set(bitmap) - {"0", "1"}:
+            raise ValueError(
+                f"bitmap {bitmap!r} invalid for dims {self.dim_names}")
+        sel = tuple(n for n, b in zip(self.dim_names, bitmap) if b == "1")
+        if not sel:
+            raise ValueError("empty dim selection")
+        return sel
+
+    def resolve_dims(self, dims) -> tuple[str, ...]:
+        """Accept a bitmap string, a single name, or a sequence of names."""
+        if isinstance(dims, str):
+            if set(dims) <= {"0", "1"} and len(dims) == len(self.dim_names):
+                return self.dims_from_bitmap(dims)
+            if dims in self.dim_names:
+                return (dims,)
+            raise ValueError(f"unknown dim selection {dims!r}")
+        sel = tuple(dims)
+        for d in sel:
+            if d not in self.dim_names:
+                raise ValueError(f"unknown dim {d!r}; have {self.dim_names}")
+        # preserve hypercube (major->minor) order regardless of input order
+        return tuple(d for d in self.dim_names if d in sel)
+
+    def group_size(self, dims) -> int:
+        sel = self.resolve_dims(dims)
+        return int(np.prod([self.size(d) for d in sel]))
+
+    def num_instances(self, dims) -> int:
+        """Number of independent communication groups (cube slices)."""
+        return int(np.prod(self.dim_sizes)) // self.group_size(dims)
+
+    def size(self, name: str) -> int:
+        return self.dim_sizes[self.dim_names.index(name)]
+
+    def crosses_dcn(self, dims) -> bool:
+        sel = self.resolve_dims(dims)
+        return any(d in self.dcn_dims for d in sel)
+
+    def split_fast_slow(self, dims) -> tuple[tuple[str, ...], tuple[str, ...]]:
+        """Partition selected dims into (ICI dims, DCN dims)."""
+        sel = self.resolve_dims(dims)
+        fast = tuple(d for d in sel if d not in self.dcn_dims)
+        slow = tuple(d for d in sel if d in self.dcn_dims)
+        return fast, slow
+
+    # ------------------------------------------------------------- shardings
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def axis_index(self, dims) -> jax.Array:
+        """Linearized index of this shard within its communication group
+        (valid inside shard_map over ``self.mesh``)."""
+        return jax.lax.axis_index(self.resolve_dims(dims))
+
+    @property
+    def ndev(self) -> int:
+        return int(np.prod(self.dim_sizes))
+
+    def describe(self) -> str:
+        parts = [f"{n}={s}" for n, s in zip(self.dim_names, self.dim_sizes)]
+        tag = ",".join(parts)
+        return f"Hypercube[{tag}; dcn={self.dcn_dims or '()'}]"

@@ -1,0 +1,121 @@
+"""Analytic cost model + algorithm planner (PID-Comm's "guide the user"
+role, §III-B/§IV-A, automated).
+
+Given a hypercube, a dim selection and a payload size, estimates per-device
+communication time for each applicable algorithm and picks the fastest. The
+same terms feed the roofline analysis (EXPERIMENTS.md) and the benchmark
+harness's ``derived`` column.
+
+Hardware constants are TPU v5e (the deployment target):
+  peak bf16 compute  197 TFLOP/s / chip
+  HBM bandwidth      819 GB/s / chip
+  ICI link bandwidth  50 GB/s / link (per mesh-axis neighbour hop)
+  DCN bandwidth       3.125 GB/s / chip effective (25 Gb/s; pods cross DCN)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.hypercube import Hypercube
+
+PEAK_BF16_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 3.125e9
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEstimate:
+    primitive: str
+    algorithm: str
+    schedule: tuple[str, ...]          # human-readable hop list
+    ici_bytes: float                   # per-device bytes over ICI
+    dcn_bytes: float                   # per-device bytes over DCN
+    seconds: float
+
+    def dominant(self) -> str:
+        return "dcn" if self.dcn_bytes / DCN_BW > self.ici_bytes / ICI_BW \
+            else "ici"
+
+
+def _bw_time(ici_bytes: float, dcn_bytes: float) -> float:
+    return ici_bytes / ICI_BW + dcn_bytes / DCN_BW
+
+
+def _group_bytes(primitive: str, payload: float, g: int) -> float:
+    """Per-device bytes moved by the *direct* algorithm on one flat group."""
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    return {
+        "all_to_all": payload * frac,
+        "reduce_scatter": payload * frac,
+        "all_gather": payload * (g - 1),   # payload = per-device shard bytes
+        "all_reduce": 2 * payload * frac,
+        "broadcast": payload,
+        "scatter": payload,
+        "gather": payload,
+        "reduce": payload,
+    }[primitive]
+
+
+def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
+             algorithm: str = "pidcomm") -> CommEstimate:
+    """Estimate one collective. ``payload_bytes`` is the per-device payload
+    (for all_gather: the local shard; for others: the local buffer)."""
+    sel = cube.resolve_dims(dims)
+    fast, slow = cube.split_fast_slow(sel)
+    gf = int(np.prod([cube.size(d) for d in fast])) if fast else 1
+    gs = int(np.prod([cube.size(d) for d in slow])) if slow else 1
+    g = gf * gs
+
+    if algorithm == "naive":
+        # replicated-intermediate flow: every device ships its full payload to
+        # everyone and receives (g-1) full payloads.
+        ici = payload_bytes * (gf - 1) if gf > 1 else 0.0
+        dcn = payload_bytes * (g - 1) - ici if gs > 1 else 0.0
+        sched = (f"allgather-full[{'x'.join(sel)}]", "local-modulate",
+                 "local-slice")
+        return CommEstimate(primitive, "naive", sched, ici, dcn,
+                            _bw_time(ici, dcn))
+
+    if primitive == "all_reduce" and gs > 1 and gf > 1:
+        # hierarchical §IX-A
+        ici = 2 * payload_bytes * (gf - 1) / gf
+        dcn = 2 * (payload_bytes / gf) * (gs - 1) / gs
+        sched = (f"reduce_scatter[{'x'.join(fast)}]",
+                 f"all_reduce[{'x'.join(slow)}]",
+                 f"all_gather[{'x'.join(fast)}]")
+        return CommEstimate(primitive, "hierarchical", sched, ici, dcn,
+                            _bw_time(ici, dcn))
+
+    ici = _group_bytes(primitive, payload_bytes, gf) if gf > 1 else 0.0
+    # direct over a pod-crossing group: the (gs-1)/gs fraction crosses DCN
+    dcn = 0.0
+    if gs > 1:
+        total = _group_bytes(primitive, payload_bytes * (gf if primitive == "all_gather" else 1), gs)
+        dcn = total
+    sched = (f"{primitive}[{'x'.join(sel)}]",)
+    return CommEstimate(primitive, "direct", sched, ici, dcn,
+                        _bw_time(ici, dcn))
+
+
+def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float
+         ) -> CommEstimate:
+    """Pick the fastest applicable algorithm for this primitive/group."""
+    cands = [estimate(cube, primitive, dims, payload_bytes, a)
+             for a in ("pidcomm",)]
+    # int8 compression halves/quarters the DCN hop; the trainer decides
+    # whether the accuracy contract allows it -- we only report the estimate.
+    return min(cands, key=lambda e: e.seconds)
+
+
+def matmul_time(m: int, n: int, k: int, dtype_bytes: int = 2) -> float:
+    """Roofline time of one matmul on one chip: max(compute, memory)."""
+    flops = 2 * m * n * k
+    bytes_ = dtype_bytes * (m * k + k * n + m * n)
+    return max(flops / PEAK_BF16_FLOPS, bytes_ / HBM_BW)

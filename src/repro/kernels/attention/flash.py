@@ -1,0 +1,119 @@
+"""Blockwise (flash) attention forward as a Pallas TPU kernel.
+
+Grid: (batch*kv_heads*groups, n_q_blocks, n_kv_blocks), kv innermost so the
+running max / denominator / accumulator live in VMEM scratch across kv steps
+(the classic TPU flash schedule). Supports causal masking and sliding
+windows (paper-relevant: mixtral SWA-4096, gemma3 local:global).
+
+Block shapes are MXU-aligned: (block_q, head_dim) x (block_k, head_dim)
+matmuls with block_q = block_k = 128 by default (head_dim 64..256 are all
+multiples of the 128-lane register tile in the minor dim after padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, causal: bool, window: int,
+                  scale: float, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                       # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = -1,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd), H % KV == 0.
+
+    GQA folded into the grid: head h uses kv head h * KV // H.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_kv = Sq // block_q, Sk // block_k
+
+    # layout: (B*H, Sq, hd) for q/o; (B*KV, Sk, hd) for k/v
+    qr = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=int(window), scale=hd ** -0.5, n_kv=n_kv)
+
+    def kv_index(b, i, j):
+        # b = batch * H + h  ->  kv row = batch * KV + h // G
+        return ((b // H) * KV + (b % H) // G, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(B, H, Sq, hd), 1, 2)

@@ -1,0 +1,11 @@
+"""Backend-dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+import jax
+
+from repro.kernels.attention import ref
+from repro.kernels.attention.flash import flash_attention as _pallas
+
+
+def flash_attention(q, k, v, *, causal=True, window=-1):
+    if jax.default_backend() == "tpu":
+        return _pallas(q, k, v, causal=causal, window=window)
+    return ref.flash_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,17 @@
+"""Backend-dispatching wrapper: Pallas on TPU, jnp oracle elsewhere."""
+import jax
+
+from repro.kernels.reorder import ref
+from repro.kernels.reorder import reorder as _k
+
+
+def tile_swizzle(x, perm):
+    if jax.default_backend() == "tpu":
+        return _k.tile_swizzle(x, perm)
+    return ref.tile_swizzle(x, perm)
+
+
+def block_transpose(x, g1, g2):
+    if jax.default_backend() == "tpu":
+        return _k.block_transpose(x, g1, g2)
+    return ref.block_transpose(x, g1, g2)

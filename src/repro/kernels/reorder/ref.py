@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the reorder kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def tile_swizzle(x: jax.Array, perm) -> jax.Array:
+    perm = jnp.asarray(perm)
+    G = perm.shape[0]
+    rows, D = x.shape
+    b = rows // G
+    return jnp.take(x.reshape(G, b, D), perm, axis=0).reshape(rows, D)
+
+
+def block_transpose(x: jax.Array, g1: int, g2: int) -> jax.Array:
+    rows, D = x.shape
+    b = rows // (g1 * g2)
+    return jnp.swapaxes(x.reshape(g1, g2, b, D), 0, 1).reshape(rows, D)

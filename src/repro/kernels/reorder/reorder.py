@@ -1,0 +1,67 @@
+"""PE-assisted reordering as a Pallas TPU kernel (paper §V-A1, adapted).
+
+On UPMEM, PEs locally rotate their data in WRAM before the bus transfer so
+the host's modulation becomes a register-local shuffle. On TPU the analogue
+is a *tile swizzle executed in VMEM*: the (E, C, D) dispatch buffer is
+re-laid-out into the destination-contiguous order the AlltoAll wants, one
+(tile_rows x D) tile per grid step, with the permutation folded into the
+grid's index_map via scalar prefetch -- the data never round-trips through
+HBM in the wrong order (in-register modulation, §V-A2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(perm_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
+def tile_swizzle_p(x: jax.Array, perm: jax.Array, *, n_blocks: int,
+                   interpret: bool = False) -> jax.Array:
+    """Permute equal row-blocks of ``x``: out block i = in block perm[i].
+
+    x: (G*b, D) viewed as G row-blocks of b rows; perm: (G,) int32, passed
+    as a scalar-prefetch operand so the permutation drives the DMA schedule
+    directly (one VMEM-resident tile copy per grid step, no gather op).
+    """
+    G = n_blocks
+    rows, D = x.shape
+    assert rows % G == 0, (rows, G)
+    b = rows // G
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
+        in_specs=[pl.BlockSpec((b, D), lambda i, perm_ref: (perm_ref[i], 0))],
+        out_specs=pl.BlockSpec((b, D), lambda i, perm_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, D), x.dtype),
+        interpret=interpret,
+    )(perm.astype(jnp.int32), x)
+
+
+def tile_swizzle(x: jax.Array, perm, *, interpret: bool = False) -> jax.Array:
+    perm = jnp.asarray(perm, jnp.int32)
+    return tile_swizzle_p(x, perm, n_blocks=int(perm.shape[0]),
+                          interpret=interpret)
+
+
+def block_transpose(x: jax.Array, g1: int, g2: int, *,
+                    interpret: bool = False) -> jax.Array:
+    """(g1*g2*b, D) block-grid transpose: block (i, j) -> block (j, i).
+
+    Exactly the local pre-reorder AlltoAll needs when a hypercube dim spans
+    multiple entangled groups (paper Fig. 9)."""
+    perm = tuple(int(i * g2 + j) for j in range(g2) for i in range(g1))
+    return tile_swizzle(x, perm, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Backend-dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+import jax
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.rwkv6 import rwkv6_chunked as _pallas
+
+
+def rwkv6_chunked(r, k, v, logw, u, *, chunk=64):
+    if jax.default_backend() == "tpu":
+        return _pallas(r, k, v, logw, u, chunk=chunk)
+    return ref.rwkv6_chunked(r, k, v, logw, u, chunk=chunk)

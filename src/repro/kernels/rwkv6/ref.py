@@ -1,0 +1,8 @@
+"""Oracle for the rwkv6 kernel: the jnp chunked form in repro.models.ssm
+(itself validated against the naive sequential recurrence)."""
+from repro.models.ssm import rwkv6_chunked as _chunked
+
+
+def rwkv6_chunked(r, k, v, logw, u, *, chunk=64):
+    out, _ = _chunked(r, k, v, logw, u, chunk=chunk)
+    return out

@@ -1,0 +1,24 @@
+"""Physical mesh construction for the production deployment.
+
+The production target is TPU v5e: one pod = a 16x16 ICI-connected slice
+(256 chips), two pods connected over DCN for the multi-pod configuration.
+``make_production_mesh`` is a function (never a module-level constant) so that
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types (JAX 0.8/0.9 compatible)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The deployment mesh: 16x16 chips per pod; 2 pods over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)

@@ -1,0 +1,84 @@
+"""Perf-iteration harness (EXPERIMENTS.md §Perf).
+
+Lowers one (arch x shape) cell under a named optimization variant, derives
+the roofline terms via the two-point cost probe, and writes
+results/perf/<cell>__<variant>.json for the hypothesis -> change -> measure
+log.
+
+    python -m repro.launch.perf --arch mixtral-8x7b --shape train_4k \
+        --variant sort_dispatch
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses as dc
+import json
+
+from repro import configs
+from repro.launch import dryrun
+
+VARIANTS = {
+    # name -> (cfg transform, lower kwargs)
+    "baseline": (None, {}),
+    "sort_dispatch": (lambda c: dc.replace(c, moe_dispatch="sort"), {}),
+    "resident_weights": (None, {"resident": True}),
+    "int8_kv": (None, {"cache_dtype": "int8"}),
+    "resident+int8_kv": (None, {"resident": True, "cache_dtype": "int8"}),
+    "cap1.0": (lambda c: dc.replace(c, capacity_factor=1.0), {}),
+    "sort+cap1.0": (lambda c: dc.replace(c, capacity_factor=1.0,
+                                         moe_dispatch="sort"), {}),
+    "lowp": (None, {"lowp": 1}),
+    "lowp2": (None, {"lowp": 2}),
+    "lowp2+sort": (lambda c: dc.replace(c, moe_dispatch="sort"),
+                   {"lowp": 2}),
+    "serve_bf16": (None, {"resident": True, "serve_bf16": True}),
+    "serve_bf16+int8_kv": (None, {"resident": True, "serve_bf16": True,
+                                  "cache_dtype": "int8"}),
+}
+
+
+def run(arch: str, shape: str, variant: str, *, multi_pod=False,
+        out="results/perf"):
+    tfm, kw = VARIANTS[variant]
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "variant": variant, "status": "ok",
+           "params_total": configs.get(arch).param_count(),
+           "params_active": configs.get(arch).active_param_count()}
+    probe = dryrun.run_probe(arch, shape, multi_pod=multi_pod,
+                             cfg_transform=tfm, **kw)
+    rec.update(probe)
+    rec["cost"] = rec["cost_x"]
+
+    import sys
+    sys.path.insert(0, os.getcwd())
+    from benchmarks import roofline
+    terms = roofline.analyse(rec)
+    rec["terms"] = {k: terms[k] for k in
+                    ("compute_s", "memory_s", "collective_s", "dominant",
+                     "useful_ratio", "roofline_frac")}
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{arch}_{shape}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    t = rec["terms"]
+    print(f"{arch}/{shape}/{variant}: compute={t['compute_s']:.3e}s "
+          f"memory={t['memory_s']:.3e}s collective={t['collective_s']:.3e}s "
+          f"dominant={t['dominant']} frac={t['roofline_frac']:.2%}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variant, multi_pod=args.multipod)
+
+
+if __name__ == "__main__":
+    main()

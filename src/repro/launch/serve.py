@@ -1,0 +1,77 @@
+"""Serving launcher: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.models.params import init_params, param_specs
+    from repro.models.serving import (
+        Server, make_serve_plan, cache_specs, init_cache)
+    from repro.models.topology import build_serve_topology
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.scaled_for_smoke()
+    n = len(jax.devices())
+    mesh = make_mesh((n, 1), ("data", "model"))
+    topo = build_serve_topology(cfg, mesh)
+    S_ctx = args.prompt_len + args.gen
+    plan = make_serve_plan(cfg, topo, S_ctx=S_ctx, global_batch=args.batch)
+    server = Server(cfg, topo, plan)
+    print(f"arch={cfg.name} cube={topo.cube.describe()} "
+          f"cache={plan.S_cache}")
+
+    params = init_params(cfg, topo, seed=0)
+    cache = init_cache(cfg, topo, plan)
+    specs = param_specs(cfg, topo)
+    cspecs = cache_specs(cfg, topo, plan)
+    ba = plan.batch_axes or None
+
+    step = jax.jit(shard_map(
+        server.decode_shard, mesh=topo.cube.mesh,
+        in_specs=(specs, cspecs, P(ba), P(ba)),
+        out_specs=(P(ba, topo.tp), cspecs), check_vma=False),
+        donate_argnums=(1,))
+
+    rng = np.random.RandomState(0)
+    B = args.batch
+    prompt = rng.randint(0, cfg.vocab_size, (B, args.prompt_len))
+    toks = jnp.asarray(prompt[:, 0], jnp.int32)
+    out = []
+    # teacher-forced "prefill" via decode steps (keeps the demo single-path),
+    # then free-running generation
+    for t in range(S_ctx - 1):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, cache = step(params, cache, toks, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if t + 1 < args.prompt_len:
+            toks = jnp.asarray(prompt[:, t + 1], jnp.int32)
+        else:
+            toks = nxt
+            out.append(np.asarray(nxt))
+    gen = np.stack(out, axis=1)
+    print(f"generated {gen.shape} tokens; sample row: {gen[0][:12]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 200 --batch 8 --seq 256 [--smoke] [--ckpt-dir ckpts]
+
+With --smoke the architecture is reduced to its CPU-runnable family config
+(single device). On a real TPU deployment the same entry point runs the full
+config on the production mesh (``--production`` / ``--multipod``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fp32-moments", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from repro import configs
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import DataConfig, TokenStream
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.models.params import init_params, param_specs
+    from repro.models.topology import build_topology
+    from repro.optim import adamw
+    from repro.runtime.trainer import (
+        Trainer, TrainConfig, make_train_step, input_batch_specs)
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.scaled_for_smoke()
+    if args.production or args.multipod:
+        mesh = make_production_mesh(multi_pod=args.multipod)
+    else:
+        n = len(jax.devices())
+        mp = min(cfg.model_parallel, n)
+        if args.smoke:
+            mp = 1
+        mesh = make_mesh((n // mp, mp), ("data", "model"))
+    topo = build_topology(cfg, mesh, global_batch=args.batch)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"cube={topo.cube.describe()}")
+
+    tc = TrainConfig(lr=args.lr, warmup=args.warmup,
+                     total_steps=args.steps,
+                     adamw=adamw.AdamWConfig(use_8bit=not args.fp32_moments))
+    params = init_params(cfg, topo, seed=0)
+    opt = adamw.init_state(params, tc.adamw)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        start = ckpt.latest_step()
+        params, opt = ckpt.restore(start, params, opt)
+        print(f"resumed from step {start}")
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                    vocab_size=cfg.vocab_size)
+    stream = TokenStream(cfg, dc)
+
+    trainer = Trainer(cfg, topo, tc, checkpointer=ckpt)
+
+    def batches():
+        import jax.numpy as jnp
+        for step in range(start, args.steps):
+            b = stream.global_batch_at(step)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    params, opt, hist = trainer.run(
+        params, opt, batches(), start_step=start,
+        checkpoint_every=args.ckpt_every, log_every=max(args.steps // 20, 1))
+    if ckpt:
+        ckpt.wait()
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(first {hist[0]['loss']:.4f}); straggler steps: "
+          f"{trainer.slow_steps}")
+
+
+if __name__ == "__main__":
+    main()

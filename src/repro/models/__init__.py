@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig
+from repro.models.topology import (
+    Topology, build_topology, build_serve_topology)
+from repro.models.lm import Model
+from repro.models.serving import Server, ServePlan, make_serve_plan
+
+__all__ = ["ModelConfig", "Topology", "build_topology",
+           "build_serve_topology", "Model", "Server", "ServePlan",
+           "make_serve_plan"]

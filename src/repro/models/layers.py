@@ -1,0 +1,265 @@
+"""Per-shard layer math shared by every architecture family.
+
+``chunked_attention`` is the pure-jnp flash-attention formulation (blockwise
+log-sum-exp accumulation). It doubles as the oracle for the Pallas kernel in
+``repro.kernels.attention`` and keeps the dry-run's peak memory honest (no
+S x S score materialization in the HLO).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+# Cost-probe mode (see launch/dryrun.py run_probe): XLA cost_analysis counts
+# a while-loop body once regardless of trip count, so probe lowerings unroll
+# every scan (and cap inner-chunk trip counts at 4 -- identical FLOPs).
+COST_PROBE = False
+
+# Low-precision-stats mode (§Perf variants): 0 = off; 1 = bf16 operands with
+# f32 dot accumulation ("lowp"); 2 = additionally keep the attention
+# score/probability space in bf16, f32 only for the running max/denominator
+# ("lowp2" -- what the fused Pallas kernel does in VMEM on real TPU).
+LOWP = 0
+
+
+def pscan(f, init, xs, unroll_hint: int = 1):
+    return lax.scan(f, init, xs, unroll=True if COST_PROBE else unroll_hint)
+
+
+def probe_trips(n: int) -> int:
+    """Cap sequential trips in probe mode (FLOPs-preserving re-chunk)."""
+    return min(n, 4) if COST_PROBE else n
+
+
+def pvary_like(x, *refs):
+    """Promote ``x``'s varying-axes (shard_map vma) to the union of the
+    refs' -- needed for scan carries initialized from constants."""
+    want = frozenset()
+    for r in refs:
+        want = want | getattr(jax.typeof(r), "vma", frozenset())
+    have = getattr(jax.typeof(x), "vma", frozenset())
+    need = tuple(sorted(want - have))
+    if not need:
+        return x
+    return lax.pcast(x, need, to="varying")
+
+
+def pvary_axes(x, axes):
+    """Mark ``x`` as varying over ``axes`` (no-op outside shard_map/vma)."""
+    have = getattr(jax.typeof(x), "vma", frozenset())
+    need = tuple(a for a in axes if a not in have)
+    if not need:
+        return x
+    try:
+        return lax.pcast(x, need, to="varying")
+    except Exception:
+        return x
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    if LOWP >= 1 and dt == jnp.bfloat16:
+        # f32 only in the reduction; the (.., D) tensor never converts
+        var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1,
+                       keepdims=True)
+        r = lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+        return x * r.astype(dt)
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: Array, wg: Array, wu: Array, wd: Array) -> Array:
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def _mask(q_pos: Array, k_pos: Array, causal: bool, window) -> Array:
+    """(Sq, Sk) boolean visibility mask. window: python int or traced scalar;
+    negative = full attention. Negative key positions (banded-path padding)
+    are never visible."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = dk >= 0
+    if causal:
+        ok &= dk <= dq
+    w = jnp.asarray(window)
+    ok &= jnp.where(w < 0, True, (dq - dk) < w)
+    return ok
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window=-1, q_offset=0, k_offset=0,
+                      chunk: int = 1024, partial: bool = False):
+    """Blockwise (flash) attention with GQA, sliding window, offsets.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    ``q_offset``/``k_offset`` are the global positions of q[0]/k[0] (ints or
+    traced scalars) -- used by context-parallel prefill and decode.
+
+    Static sliding windows on aligned self-attention take the *banded* path:
+    each query block only visits the (window + block) keys it can see,
+    cutting attention FLOPs/bytes by ~Sk/(window+block) (mixtral SWA-4096 at
+    32k prefill: ~6.4x).
+
+    Returns (B, Sq, H, hd); if ``partial``, returns (acc, m, l) unnormalized
+    so callers can LSE-combine partial results across shards (flash-decode).
+    """
+    if (isinstance(window, int) and window > 0 and causal and not partial
+            and q.shape[1] == k.shape[1] and q.shape[1] > window
+            and isinstance(q_offset, int) and q_offset == 0
+            and isinstance(k_offset, int) and k_offset == 0):
+        return banded_attention(q, k, v, window=window, chunk=chunk)
+    return _chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, k_offset=k_offset,
+                              chunk=chunk, partial=partial)
+
+
+def banded_attention(q: Array, k: Array, v: Array, *, window: int,
+                     chunk: int = 1024):
+    """Causal sliding-window attention visiting only the in-band keys.
+
+    Scans over query blocks; each block attends to a static-size
+    (window_pad + block) key slice ending at its last position.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Cq = min(chunk, S)
+    nq = S // Cq              # vmapped (batched), not scanned: probe-exact
+    W = min(window, S)
+    # pad keys on the left so every block's band is a static-size slice
+    Wp = ((W - 1) // Cq + 1) * Cq                   # band rounded to blocks
+    band = Wp + Cq
+    kp = jnp.pad(k, ((0, 0), (Wp, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (Wp, 0), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, Cq, H, hd)
+
+    def block(qi, i):
+        # keys for block i: global positions [i*Cq - Wp, i*Cq + Cq)
+        kb = lax.dynamic_slice_in_dim(kp, i * Cq, band, axis=1)
+        vb = lax.dynamic_slice_in_dim(vp, i * Cq, band, axis=1)
+        o = _chunked_attention(
+            qi, kb, vb, causal=True, window=window,
+            q_offset=i * Cq, k_offset=i * Cq - Wp, chunk=band)
+        return o
+
+    outs = jax.vmap(block, in_axes=(1, 0), out_axes=1)(
+        qb, jnp.arange(nq))
+    return outs.reshape(B, S, H, hd)
+
+
+def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                       window=-1, q_offset=0, k_offset=0,
+                       chunk: int = 1024, partial: bool = False):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    nc = probe_trips(max(Sk // min(chunk, Sk), 1))
+    C = Sk // nc
+    if LOWP >= 1 and q.dtype == jnp.bfloat16:
+        # bf16 operands, f32 accumulation inside the dots -- no (B,S,..)
+        # converts / f32 spills of q,k,v
+        qf = (q * scale).reshape(B, Sq, KV, G, hd)
+        kc = k.reshape(B, nc, C, KV, hd)
+        vc = v.reshape(B, nc, C, KV, hd)
+    else:
+        qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+        kc = k.astype(jnp.float32).reshape(B, nc, C, KV, hd)
+        vc = v.astype(jnp.float32).reshape(B, nc, C, KV, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    bf16_scores = LOWP >= 2 and q.dtype == jnp.bfloat16
+
+    def step(carry, inp):
+        acc, m, l = carry
+        ci, kb, vb = inp
+        k_pos = k_offset + ci * C + jnp.arange(C)
+        if bf16_scores:
+            # score/probability space stays bf16 (as the fused TPU kernel
+            # keeps it in VMEM); only m/l/acc accumulate in f32
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kb)          # bf16
+            msk = _mask(q_pos, k_pos, causal, window)
+            s = jnp.where(msk[None, None, None], s,
+                          jnp.bfloat16(NEG_INF))
+            m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.exp(s - m_new[..., None].astype(jnp.bfloat16))
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1, dtype=jnp.float32)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckh->bkgqh", p, vb,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kb,
+                       preferred_element_type=jnp.float32)      # scores
+        msk = _mask(q_pos, k_pos, causal, window)               # (Sq, C)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))                  # (B,KV,G,Sq)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = pvary_like(jnp.zeros((B, KV, G, Sq, hd), jnp.float32), qf, kc, vc)
+    m0 = pvary_like(jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32),
+                    qf, kc, vc)
+    l0 = pvary_like(jnp.zeros((B, KV, G, Sq), jnp.float32), qf, kc, vc)
+    idx = jnp.arange(nc)
+    kb = jnp.moveaxis(kc, 1, 0)
+    vb = jnp.moveaxis(vc, 1, 0)
+    (acc, m, l), _ = pscan(step, (acc0, m0, l0), (idx, kb, vb))
+    if partial:
+        return acc, m, l
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)         # (B,Sq,KV,G,hd)
+    return out.astype(q.dtype)
+
+
+def finish_partial_attention(acc, m, l, *, psum_axes, B, Sq, H, hd, dtype):
+    """LSE-combine ``partial=True`` results across ``psum_axes`` shards."""
+    m_max = lax.pmax(m, psum_axes)
+    w = jnp.exp(m - m_max)
+    acc = lax.psum(acc * w[..., None], psum_axes)
+    l = lax.psum(l * w, psum_axes)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, window=-1, q_offset=0,
+                        k_offset=0):
+    """Naive O(S^2)-memory oracle (tests only)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, hd) * hd ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    msk = _mask(q_offset + jnp.arange(Sq), k_offset + jnp.arange(Sk),
+                causal, window)
+    s = jnp.where(msk[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,294 @@
+"""Parameter definitions: global shapes, shardings, init, grad-sync tags.
+
+Storage layout (ZeRO-3 / FSDP): every weight is sharded over the ``data``
+axis on one dimension (gathered with pidcomm AllGather inside the layer scan;
+the AllGather's autodiff transpose reduce-scatters the gradients -- no
+separate gradient all-reduce on the fast domain). Model-parallel dimensions
+are sharded over the ``tp`` (= ``(ep, etp)`` for MoE) axes.
+
+``sum_axes`` marks parameters whose per-shard gradients are *partial* and
+must be psum'ed over those logical axes after backward (e.g. norms, routers,
+replicated KV projections). Correctness is pinned by
+tests/test_parallel_consistency.py against a single-device oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import (
+    ModelConfig, ATTN, MAMBA, RWKV, DENSE, MOE, RWKVCM)
+from repro.models.topology import Topology
+
+MASTER_DTYPE = jnp.float32
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: P
+    init: str = "normal"       # normal | zeros | ones | out_proj | a_log | dt
+    sum_axes: str = ""         # "" | "tp" | "ep" -- grad psum group
+    dtype: Any = MASTER_DTYPE
+
+
+def _round_up(x: int, m: int) -> int:
+    return int(math.ceil(x / m) * m)
+
+
+def kv_is_sharded(cfg: ModelConfig, topo: Topology) -> bool:
+    t = topo.tp_size
+    return cfg.n_kv_heads >= t and cfg.n_kv_heads % t == 0
+
+
+def vocab_padded(cfg: ModelConfig, topo: Topology) -> int:
+    return _round_up(cfg.vocab_size, topo.tp_size)
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return _round_up(cfg.d_model // 16, 8)
+
+
+# --------------------------------------------------------------------- defs
+def _attn_defs(cfg, topo, prefix=""):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    tp = topo.tp
+    kv_spec = P("data", tp) if kv_is_sharded(cfg, topo) else P("data", None)
+    kv_sum = "" if kv_is_sharded(cfg, topo) else "tp"
+    d = {
+        prefix + "ln": ParamDef((D,), P("data"), "zeros", "tp"),
+        prefix + "wq": ParamDef((D, H * hd), P("data", tp)),
+        prefix + "wkv": ParamDef((D, 2 * KV * hd), kv_spec, "normal", kv_sum),
+        prefix + "wo": ParamDef((H * hd, D), P(tp, "data"), "out_proj"),
+    }
+    if cfg.qk_norm and not prefix:
+        d["q_norm"] = ParamDef((hd,), P(None), "zeros", "tp")
+        d["k_norm"] = ParamDef((hd,), P(None), "zeros", "tp")
+    return d
+
+
+def _mamba_defs(cfg, topo):
+    D = cfg.d_model
+    din = cfg.mamba_expand * D
+    n = cfg.d_state
+    R = dt_rank(cfg)
+    tp = topo.tp
+    return {
+        "ln": ParamDef((D,), P("data"), "zeros", "tp"),
+        "in_proj": ParamDef((D, 2 * din), P("data", tp)),
+        "conv_w": ParamDef((cfg.conv_kernel, din), P(None, tp)),
+        "conv_b": ParamDef((din,), P(tp), "zeros"),
+        "x_proj": ParamDef((din, R + 2 * n), P(tp, None)),
+        "dt_proj": ParamDef((R, din), P(None, tp)),
+        "dt_bias": ParamDef((din,), P(tp), "dt"),
+        "a_log": ParamDef((din, n), P(tp, None), "a_log"),
+        "d_skip": ParamDef((din,), P(tp), "ones"),
+        "out_proj": ParamDef((din, D), P(tp, "data"), "out_proj"),
+    }
+
+
+def _rwkv_defs(cfg, topo):
+    D = cfg.d_model
+    tp = topo.tp
+    lora = 64
+    return {
+        "ln": ParamDef((D,), P("data"), "zeros", "tp"),
+        "mu": ParamDef((5, D), P(None, "data"), "normal", "tp"),
+        "wr": ParamDef((D, D), P("data", tp)),
+        "wk": ParamDef((D, D), P("data", tp)),
+        "wv": ParamDef((D, D), P("data", tp)),
+        "wg": ParamDef((D, D), P("data", tp)),
+        "w_lora_a": ParamDef((D, lora), P("data", None), "normal", "tp"),
+        "w_lora_b": ParamDef((lora, D), P(None, tp)),
+        "decay_w0": ParamDef((D,), P(tp), "decay"),
+        "bonus_u": ParamDef((D,), P(tp)),
+        "wo": ParamDef((D, D), P(tp, "data"), "out_proj"),
+    }
+
+
+def _dense_ffn_defs(cfg, topo):
+    D, F = cfg.d_model, cfg.d_ff
+    tp = topo.tp
+    return {
+        "fln": ParamDef((D,), P("data"), "zeros", "tp"),
+        "wg": ParamDef((D, F), P("data", tp)),
+        "wu": ParamDef((D, F), P("data", tp)),
+        "wd": ParamDef((F, D), P(tp, "data"), "out_proj"),
+    }
+
+
+def _moe_ffn_defs(cfg, topo):
+    D, Fe = cfg.d_model, cfg.d_ff_expert
+    Ep = cfg.n_experts_padded
+    ep, etp = topo.ep, topo.etp
+    d = {
+        "fln": ParamDef((D,), P("data"), "zeros", "ep"),
+        "router": ParamDef((D, Ep), P("data", None), "normal", "ep"),
+        "we_g": ParamDef((Ep, D, Fe), P(ep, "data", etp)),
+        "we_u": ParamDef((Ep, D, Fe), P(ep, "data", etp)),
+        "we_d": ParamDef((Ep, Fe, D), P(ep, etp, "data"), "out_proj"),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * Fe
+        d["ws_g"] = ParamDef((D, Fs), P("data", None), "normal", "ep")
+        d["ws_u"] = ParamDef((D, Fs), P("data", None), "normal", "ep")
+        d["ws_d"] = ParamDef((Fs, D), P(None, "data"), "out_proj", "ep")
+    return d
+
+
+def _rwkvcm_defs(cfg, topo):
+    D, F = cfg.d_model, cfg.d_ff
+    tp = topo.tp
+    return {
+        "fln": ParamDef((D,), P("data"), "zeros", "tp"),
+        "cm_mu": ParamDef((2, D), P(None, "data"), "normal", "tp"),
+        "cm_r": ParamDef((D, D), P("data", None), "normal", "tp"),
+        "cm_k": ParamDef((D, F), P("data", tp)),
+        "cm_v": ParamDef((F, D), P(tp, "data"), "out_proj"),
+    }
+
+
+_MIXER_DEFS = {ATTN: _attn_defs, MAMBA: _mamba_defs, RWKV: _rwkv_defs}
+_FFN_DEFS = {DENSE: _dense_ffn_defs, MOE: _moe_ffn_defs, RWKVCM: _rwkvcm_defs}
+
+
+def _stack(defs: dict, n: int) -> dict:
+    """Prepend the unit-stack dimension to every leaf."""
+    out = {}
+    for k, d in defs.items():
+        out[k] = ParamDef((n,) + d.shape, P(*((None,) + tuple(d.spec))),
+                          d.init, d.sum_axes, d.dtype)
+    return out
+
+
+def param_defs(cfg: ModelConfig, topo: Topology) -> dict:
+    D = cfg.d_model
+    tp = topo.tp
+    Vp = vocab_padded(cfg, topo)
+    unit = cfg.unit()
+    n_units = cfg.n_layers // unit
+    mixers, ffns = cfg.mixers(), cfg.ffns()
+
+    units = {}
+    for pos in range(unit):
+        d = dict(_MIXER_DEFS[mixers[pos]](cfg, topo))
+        d.update(_FFN_DEFS[ffns[pos]](cfg, topo))
+        if cfg.is_encoder_decoder and mixers[pos] == ATTN:
+            d.update(_attn_defs(cfg, topo, prefix="x"))   # cross-attention
+        units[f"p{pos}"] = _stack(d, n_units)
+
+    tree = {
+        "embed": ParamDef((Vp, D), P(tp, "data"), "embed"),
+        "units": units,
+        "final_norm": ParamDef((D,), P("data"), "zeros", "tp"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDef((D, Vp), P("data", tp))
+    if cfg.frontend:
+        fin = cfg.frontend_dim or D
+        tree["frontend_proj"] = ParamDef((fin, D), P(None, "data"),
+                                         "normal", "tp")
+    if cfg.is_encoder_decoder:
+        enc = {}
+        e_units = cfg.n_enc_layers  # encoder is uniform attention+dense
+        d = dict(_attn_defs(cfg, topo))
+        d.update(_dense_ffn_defs(cfg, topo))
+        enc["p0"] = _stack(d, e_units)
+        tree["enc_units"] = enc
+        tree["enc_final_norm"] = ParamDef((D,), P("data"), "zeros", "tp")
+    return tree
+
+
+# --------------------------------------------------------------------- init
+def _init_leaf(key, d: ParamDef, cfg: ModelConfig):
+    shape = d.shape
+    if d.init == "zeros":
+        return jnp.zeros(shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(shape, d.dtype)
+    if d.init == "a_log":
+        n = shape[-1]
+        a = jnp.tile(jnp.arange(1, n + 1, dtype=d.dtype), shape[:-1] + (1,))
+        return jnp.log(a)
+    if d.init == "dt":
+        lo, hi = math.log(1e-3), math.log(1e-1)
+        u = jax.random.uniform(key, shape, d.dtype)
+        dt = jnp.exp(lo + u * (hi - lo))
+        return dt + jnp.log(-jnp.expm1(-dt))  # inv softplus
+    if d.init == "decay":
+        return jnp.linspace(-6.0, -1.0, shape[-1], dtype=d.dtype
+                            ) * jnp.ones(shape, d.dtype)
+    scale = 0.02
+    if d.init == "out_proj":
+        scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if d.init == "embed":
+        scale = 1.0 / math.sqrt(cfg.d_model)
+    return jax.random.normal(key, shape, d.dtype) * scale
+
+
+def init_params(cfg: ModelConfig, topo: Topology, seed: int = 0):
+    """Materialize global parameter arrays (host-side; smoke-scale only)."""
+    defs = param_defs(cfg, topo)
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    vals = [_init_leaf(k, d, cfg) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(cfg: ModelConfig, topo: Topology):
+    defs = param_defs(cfg, topo)
+    return jax.tree.map(lambda d: d.spec, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_structs(cfg: ModelConfig, topo: Topology):
+    """ShapeDtypeStructs with shardings (no allocation) for the dry-run."""
+    defs = param_defs(cfg, topo)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, d.dtype, sharding=topo.cube.sharding(d.spec)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def drop_axis(spec_tree, axis: str = "data"):
+    """Replace ``axis`` with None in every PartitionSpec of a tree --
+    serve-time *resident weights*: parameters are replicated over the data
+    axis so decode never re-gathers them per token (ZeRO-inference off)."""
+    def fix(spec):
+        out = []
+        for e in tuple(spec):
+            if e == axis:
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != axis)
+                out.append(kept if kept else None)
+            else:
+                out.append(e)
+        return P(*out)
+    return jax.tree.map(
+        fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def grad_sum_spec(cfg: ModelConfig, topo: Topology):
+    """Per-leaf tuple of logical axes over which grads must be psum'ed.
+
+    NOTE: superseded by shard_map's vma-aware autodiff (check_vma=True),
+    which derives these reductions from the sharding structure; kept as
+    executable documentation of the manual rule and for audits."""
+    defs = param_defs(cfg, topo)
+
+    def axes(d: ParamDef):
+        if d.sum_axes == "tp":
+            return topo.tp
+        if d.sum_axes == "ep":
+            return topo.ep if topo.ep else topo.tp
+        return ()
+    return jax.tree.map(axes, defs, is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,0 +1,182 @@
+"""Sequence-mixing recurrences: RWKV6 ("Finch", data-dependent decay linear
+attention with per-head matrix state) and Mamba selective SSM.
+
+Both are implemented in chunked form -- O(S/C) sequential chunk steps with
+parallel intra-chunk math -- which is the TPU-native adaptation of the
+recurrences (MXU-friendly matmuls inside chunks, tiny carried state). These
+functions are the oracles for the Pallas kernels in ``repro.kernels.rwkv6``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import pvary_like, pscan, probe_trips
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- RWKV6
+def rwkv6_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                  state: Array | None = None, chunk: int = 64):
+    """RWKV6 time-mix recurrence, chunked.
+
+    r, k, v: (B, S, H, K) / logw: (B, S, H, K) with logw = -exp(w_dd) <= 0
+    (per-channel log decay); u: (H, K) bonus.
+    state: (B, H, K, V) or None.
+
+    Per step: o_t = (S_{t-1} + (u*k_t) v_t^T)^T r_t ; S_t = diag(w_t) S_{t-1}
+    + k_t v_t^T. Returns (out (B,S,H,V), final_state).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, S)
+    n = probe_trips(S // C)
+    C = S // n
+    assert n * C == S, (S, C)
+    rf = r.astype(jnp.float32).reshape(B, n, C, H, K)
+    kf = k.astype(jnp.float32).reshape(B, n, C, H, K)
+    vf = v.astype(jnp.float32).reshape(B, n, C, H, V)
+    lw = logw.astype(jnp.float32).reshape(B, n, C, H, K)
+    uf = u.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    state = pvary_like(state, rf, kf, vf, lw)
+
+    @jax.checkpoint  # chunk internals are O(C^2 + C*K*V): recompute in bwd
+    def step(S0, inp):
+        rc, kc, vc, lc = inp                       # (B, C, H, *)
+        cum = jnp.cumsum(lc, axis=1)               # inclusive logs
+        # decay from chunk start up to *before* t: prod_{i<t} w_i
+        dec_in = jnp.exp(cum - lc)                 # (B,C,H,K)
+        # cross-chunk: o_cross[t] = (r_t * dec_in[t]) @ S0
+        o_cross = jnp.einsum("bchk,bhkv->bchv", rc * dec_in, S0)
+        # intra-chunk: A[t,s] = sum_k r_t[k] * w(s+1..t-? ) ...
+        #   key s contributes to query t>s with decay prod_{i=s+1..t-1? }
+        # recurrence applies decay before add: S_t = w_t*S_{t-1} + k_t v_t^T,
+        # o_t reads S_{t-1} + u*k_t v_t^T
+        #   => key s (s<t) reaches t with prod_{i=s+1..t-1} w_i ... times w_?:
+        # S_{t-1} = sum_{s<=t-1} (prod_{i=s+1..t-1} w_i) k_s v_s^T
+        # decay(s,t) = exp(cum[t-1] - cum[s]) = exp((cum[t]-l[t]) - cum[s])
+        qd = rc * jnp.exp(cum - lc)                # r_t * exp(cum[t]-l[t])
+        kd = kf_div = kc * jnp.exp(-cum)           # k_s * exp(-cum[s])
+        A = jnp.einsum("bchk,bshk->bhcs", qd, kd)  # (B,H,C,C): s<t part
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bchk,hk,bchk->bch", rc, uf, kc)  # s == t bonus
+        o_intra = jnp.einsum("bhcs,bshv->bchv", A, vc)
+        o_intra += diag[..., None] * vc
+        # state update: S' = diag(exp(cum[C-1])) S0 + sum_s exp(cum[C-1]-cum[s]) k_s v_s^T
+        tot = cum[:, -1]                           # (B,H,K)
+        S1 = jnp.exp(tot)[..., None] * S0 + jnp.einsum(
+            "bshk,bshv->bhkv", kc * jnp.exp(tot[:, None] - cum), vc)
+        return S1, o_cross + o_intra
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(lw, 1, 0))
+    state, out = pscan(step, state, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, V)
+    return out.astype(r.dtype), state
+
+
+def rwkv6_step(r, k, v, logw, u, state):
+    """Single-token decode. r,k,v,logw: (B,H,K); state: (B,H,K,V)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]              # (B,H,K,V)
+    o = jnp.einsum("bhk,bhkv->bhv",
+                   rf, state + u[None, :, :, None].astype(jnp.float32) * kv)
+    new_state = w[..., None] * state + kv
+    return o.astype(r.dtype), new_state
+
+
+def rwkv6_reference(r, k, v, logw, u, state=None):
+    """Naive sequential oracle (tests only)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = rwkv6_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, state)
+        outs.append(o)
+    return jnp.stack(outs, axis=1), state
+
+
+# ----------------------------------------------------------------- Mamba
+def mamba_scan_chunked(u: Array, delta: Array, A: Array, Bm: Array, Cm: Array,
+                       state: Array | None = None, chunk: int = 32):
+    """Selective SSM: h_t = exp(delta_t A) h_{t-1} + delta_t B_t u_t;
+    y_t = C_t . h_t.
+
+    u, delta: (B, S, Din); A: (Din, N); Bm, Cm: (B, S, N).
+    Chunked: within-chunk associative scan, sequential chunk carry.
+    Returns (y (B,S,Din), final_state (B,Din,N)).
+    """
+    B, S, Din = u.shape
+    N = A.shape[-1]
+    C = min(chunk, S)
+    n = probe_trips(S // C)
+    C = S // n
+    assert n * C == S, (S, C)
+    uf = u.astype(jnp.float32).reshape(B, n, C, Din)
+    df = delta.astype(jnp.float32).reshape(B, n, C, Din)
+    Bf = Bm.astype(jnp.float32).reshape(B, n, C, N)
+    Cf = Cm.astype(jnp.float32).reshape(B, n, C, N)
+    Af = A.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, Din, N), jnp.float32)
+    state = pvary_like(state, uf, df, Bf, Cf)
+
+    @jax.checkpoint  # da/db/aa/bb are O(C*Din*N) fp32: recompute in bwd,
+    def step(h0, inp):  # keeping only the (B,Din,N) chunk carry
+        uc, dc, bc, cc = inp                        # (B, C, *)
+        da = jnp.exp(dc[..., None] * Af)            # (B,C,Din,N)
+        db = dc[..., None] * bc[:, :, None, :] * uc[..., None]  # (B,C,Din,N)
+
+        def comb(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a2 * a1, a2 * b1 + b2
+        aa, bb = lax.associative_scan(comb, (da, db), axis=1)
+        h = aa * h0[:, None] + bb                   # (B,C,Din,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc)
+        return h[:, -1], y
+
+    xs = (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(df, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    state, ys = pscan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Din)
+    return y.astype(u.dtype), state
+
+
+def mamba_step(u, delta, A, Bm, Cm, state):
+    """Single-token decode. u, delta: (B, Din); Bm, Cm: (B, N)."""
+    da = jnp.exp(delta.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    db = (delta.astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, None, :]
+          * u.astype(jnp.float32)[..., None])
+    h = da * state + db
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+    return y.astype(u.dtype), h
+
+
+def causal_conv1d(x: Array, w: Array, b: Array,
+                  carry: Array | None = None):
+    """Depthwise causal conv along seq. x: (B, S, D); w: (K, D); b: (D,).
+
+    carry: (B, K-1, D) previous-token tail for decode; returns (y, new_tail).
+    """
+    B, S, D = x.shape
+    K = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((B, K - 1, D), x.dtype)
+    carry = pvary_like(carry, x)
+    xp = jnp.concatenate([carry, x], axis=1)        # (B, S+K-1, D)
+    y = jnp.zeros((B, S, D), jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else carry

@@ -1,0 +1,149 @@
+"""Per-(architecture x workload) virtual hypercube construction.
+
+This is PID-Comm's user-facing flexibility (paper §IV, Fig. 20) doing real
+work: each architecture re-views the fixed physical mesh as its own logical
+hypercube --
+
+  dense   : (pod) x data x tp
+  moe     : (pod) x data x ep x etp        (attention TP = ep*etp)
+  prefill with batch < data capacity: (pod) x data x cp x tp
+            (cp = context/sequence parallelism over query chunks)
+
+All model collectives go through :class:`repro.core.Collectives` bound to
+this cube.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.collectives import Collectives
+from repro.core.hypercube import Hypercube
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    cube: Hypercube
+    col: Collectives
+    dp: tuple[str, ...]      # batch axes, e.g. ("pod", "data")
+    fsdp: tuple[str, ...]    # param-shard axes, e.g. ("data",)
+    tp: tuple[str, ...]      # attention/FFN tensor-parallel axes
+    cp: tuple[str, ...]      # context-parallel axes (may be empty)
+    ep: tuple[str, ...]      # expert-parallel axes (may be empty)
+    etp: tuple[str, ...]     # per-expert TP axes (may be empty)
+    comm_algorithm: str = "pidcomm"   # every collective's algorithm knob
+
+    def size(self, axes: tuple[str, ...]) -> int:
+        return int(np.prod([self.cube.size(a) for a in axes])) if axes else 1
+
+    @property
+    def sp(self) -> tuple[str, ...]:
+        """Sequence-parallel axes: activations between blocks are sharded
+        along sequence over cp+tp (Megatron-SP generalized)."""
+        return self.cp + self.tp
+
+    @property
+    def tp_size(self) -> int:
+        return self.size(self.tp)
+
+    @property
+    def dp_size(self) -> int:
+        return self.size(self.dp)
+
+    @property
+    def kv_sharded(self) -> bool:
+        return False  # set in build()
+
+
+def build_topology(cfg: ModelConfig, mesh, *, global_batch: int = 0,
+                   decode: bool = False) -> Topology:
+    """Derive the logical hypercube for this config on a physical mesh.
+
+    ``global_batch`` (if given) bounds the data-parallel degree; leftover
+    intra-pod parallelism becomes context parallelism (cp) for prefill
+    workloads whose batch is too small to fill the data axis.
+    """
+    phys = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pods = phys.get("pod", 1)
+    per_pod = int(np.prod(mesh.devices.shape)) // pods
+    mp = cfg.model_parallel
+    if per_pod % mp:
+        raise ValueError(f"{cfg.name}: model parallel {mp} does not divide "
+                         f"pod size {per_pod}")
+    data = per_pod // mp
+    cp = 1
+    if global_batch:
+        batch_per_pod = max(global_batch // pods, 1)
+        if batch_per_pod < data:
+            # shrink data to the batch; surplus becomes context parallelism
+            cp = data // batch_per_pod
+            data = batch_per_pod
+
+    dims: dict[str, int] = {}
+    if pods > 1:
+        dims["pod"] = pods
+    dims["data"] = data
+    if cp > 1:
+        dims["cp"] = cp
+    if cfg.n_experts:
+        dims["ep"] = cfg.ep
+        dims["etp"] = cfg.etp
+        tp_axes = tuple(a for a in ("ep", "etp") if dims[a] >= 1)
+        ep_axes, etp_axes = ("ep",), ("etp",)
+    else:
+        dims["tp"] = cfg.tp
+        tp_axes, ep_axes, etp_axes = ("tp",), (), ()
+
+    cube = Hypercube.build(mesh, dims)
+    return Topology(
+        cube=cube,
+        col=Collectives(cube),
+        dp=(("pod",) if pods > 1 else ()) + ("data",),
+        fsdp=("data",),
+        tp=tp_axes,
+        cp=("cp",) if cp > 1 else (),
+        ep=ep_axes,
+        etp=etp_axes,
+    )
+
+
+def build_serve_topology(cfg: ModelConfig, mesh) -> Topology:
+    """Decode topology: maximal model sharding, batch replicated within a pod
+    (weights fully resident -- no per-token FSDP regather), KV caches
+    sequence-sharded over the model axes (flash-decode).
+
+    The ``data`` axis survives with size 1 (or the head-parallel remainder
+    for RWKV) so parameter specs stay identical to training.
+    """
+    phys = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pods = phys.get("pod", 1)
+    per_pod = int(np.prod(mesh.devices.shape)) // pods
+
+    dims: dict[str, int] = {}
+    if pods > 1:
+        dims["pod"] = pods
+    if cfg.n_experts:
+        ep = min(cfg.n_experts_padded, per_pod)
+        etp = per_pod // ep
+        dims.update(data=1, ep=ep, etp=etp)
+        tp_axes, ep_axes, etp_axes = ("ep", "etp"), ("ep",), ("etp",)
+    else:
+        tp = per_pod
+        if cfg.serve_tp:
+            tp = min(tp, cfg.serve_tp)
+        dims.update(data=per_pod // tp, tp=tp)
+        tp_axes, ep_axes, etp_axes = ("tp",), (), ()
+
+    cube = Hypercube.build(mesh, dims)
+    return Topology(
+        cube=cube,
+        col=Collectives(cube),
+        dp=(("pod",) if pods > 1 else ()) + ("data",),
+        fsdp=("data",),
+        tp=tp_axes,
+        cp=(),
+        ep=ep_axes,
+        etp=etp_axes,
+    )

@@ -1,0 +1,143 @@
+"""AdamW with optional 8-bit block-quantized moments.
+
+Moments are quantized per last-dim row (absmax int8), the TPU analogue of the
+paper's 8-bit cross-domain trick (§V-C): the optimizer state never leaves the
+narrow domain, cutting its HBM footprint 4x -- what makes a 398B model's
+state fit 256 chips next to fp32 master weights.
+
+State is sharded identically to the parameters (ZeRO); all math is local to
+the shard (no collectives in the optimizer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    use_8bit: bool = True
+
+
+def _quant_m(x):
+    """Signed sqrt-companded int8 (precision concentrated near zero)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+    q = jnp.round(127.0 * jnp.sign(x) * jnp.sqrt(jnp.abs(x) / amax))
+    return q.astype(jnp.int8), amax.astype(jnp.float32)
+
+
+def _dequant_m(q, amax):
+    qf = q.astype(jnp.float32)
+    return jnp.sign(qf) * jnp.square(qf / 127.0) * amax
+
+
+def _quant_v(x):
+    """Non-negative 4th-root-companded int8: second moments span many
+    orders of magnitude; linear absmax would zero small rows and blow up
+    1/sqrt(v) updates."""
+    amax = jnp.maximum(jnp.max(x, axis=-1, keepdims=True), 1e-20)
+    q = jnp.round(127.0 * jnp.power(x / amax, 0.25))
+    return q.astype(jnp.int8), amax.astype(jnp.float32)
+
+
+def _dequant_v(q, amax):
+    return jnp.power(q.astype(jnp.float32) / 127.0, 4.0) * amax
+
+
+def init_state(params, cfg: AdamWConfig):
+    def leaf(p):
+        if cfg.use_8bit:
+            return {"m_q": jnp.zeros(p.shape, jnp.int8),
+                    "m_s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32),
+                    "v_q": jnp.zeros(p.shape, jnp.int8),
+                    "v_s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+        return {"m": jnp.zeros_like(p, jnp.float32),
+                "v": jnp.zeros_like(p, jnp.float32)}
+    return {"mu": jax.tree.map(leaf, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_defs(param_defs_tree, cfg: AdamWConfig, is_leaf, cube=None):
+    """(shape, spec, dtype) tree mirroring init_state, for dry-run structs.
+
+    Quantization scales are per-row *per last-dim shard*: if a weight's last
+    dim is sharded over axes X, the global scale array has size(X) columns
+    sharded over X (each shard quantizes its own columns independently)."""
+    from jax.sharding import PartitionSpec as P
+
+    def axis_size(entry):
+        if entry is None or cube is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= cube.size(a)
+        return n
+
+    def leaf(d):
+        spec = tuple(d.spec)
+        last = spec[-1] if spec else None
+        n = axis_size(last)
+        s_spec = P(*(spec[:-1] + (last,))) if spec else P()
+        s_shape = d.shape[:-1] + (n,)
+        if cfg.use_8bit:
+            return {"m_q": (d.shape, d.spec, jnp.int8),
+                    "m_s": (s_shape, s_spec, jnp.float32),
+                    "v_q": (d.shape, d.spec, jnp.int8),
+                    "v_s": (s_shape, s_spec, jnp.float32)}
+        return {"m": (d.shape, d.spec, jnp.float32),
+                "v": (d.shape, d.spec, jnp.float32)}
+    return {"mu": jax.tree.map(leaf, param_defs_tree, is_leaf=is_leaf),
+            "step": ((), P(), jnp.int32)}
+
+
+def update(params, state, grads, *, lr, cfg: AdamWConfig):
+    """One AdamW step (local shard math). Returns (params, state)."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def leaf(p, mu, g):
+        g = g.astype(jnp.float32)
+        if cfg.use_8bit:
+            m = _dequant_m(mu["m_q"], mu["m_s"])
+            v = _dequant_v(mu["v_q"], mu["v_s"])
+        else:
+            m, v = mu["m"], mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim > 1 else 0.0
+        new_p = (p.astype(jnp.float32)
+                 - lr * (upd + decay * p.astype(jnp.float32))).astype(p.dtype)
+        if cfg.use_8bit:
+            mq, ms = _quant_m(m)
+            vq, vs = _quant_v(v)
+            return new_p, {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_g = tdef.flatten_up_to(grads)
+    out = [leaf(p, mu, g) for p, mu, g in zip(flat_p, flat_mu, flat_g)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr

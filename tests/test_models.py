@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs (assignment
+requirement)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.launch.mesh import make_mesh
+from repro.models.params import init_params
+from repro.models.topology import build_topology
+from repro.optim import adamw
+from repro.runtime.trainer import TrainConfig, make_train_step
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.RandomState(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    if cfg.frontend == "patch":
+        batch["patches"] = jnp.asarray(
+            rng.randn(B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(rng.randn(B, S, cfg.frontend_dim),
+                                      jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    cfg = get(arch).scaled_for_smoke()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    topo = build_topology(cfg, mesh)
+    params = init_params(cfg, topo, seed=0)
+    tc = TrainConfig(warmup=1, lr=1e-3)
+    opt = adamw.init_state(params, tc.adamw)
+    step = make_train_step(cfg, topo, tc)
+    batch = make_batch(cfg)
+
+    params, opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch, metrics)
+    # correct initial CE scale: ~ln(vocab) for random targets
+    assert 0.5 * np.log(cfg.vocab_size) < loss < 3 * np.log(cfg.vocab_size)
+    # params updated and finite
+    leaves = jax.tree.leaves(params)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves
+               if l.dtype != jnp.int8)
+    # forward logits shape
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.models.lm import Model
+    from repro.models.params import param_specs, vocab_padded
+    from repro.runtime.trainer import input_batch_specs
+    model = Model(cfg, topo)
+    fwd = jax.jit(shard_map(
+        model.forward_logits, mesh=topo.cube.mesh,
+        in_specs=(param_specs(cfg, topo), input_batch_specs(cfg, topo)),
+        out_specs=P(topo.dp, None, topo.tp), check_vma=False))
+    S_dec = batch["tokens"].shape[1]
+    logits = fwd(params, batch)
+    assert logits.shape == (2, S_dec, vocab_padded(cfg, topo))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_loss_decreases_with_training():
+    cfg = get("qwen3-1.7b").scaled_for_smoke()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    topo = build_topology(cfg, mesh)
+    params = init_params(cfg, topo, seed=0)
+    tc = TrainConfig(warmup=2, lr=2e-3, total_steps=40)
+    opt = adamw.init_state(params, tc.adamw)
+    step = make_train_step(cfg, topo, tc)
+    batch = make_batch(cfg, B=4, S=64)
+    losses = []
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses

@@ -1,0 +1,113 @@
+"""End-to-end behaviour tests for the framework (training loop driver,
+checkpoint/restart resume, hypothesis property tests on model invariants)."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.launch.mesh import make_mesh
+from repro.models.config import ModelConfig
+from repro.models.params import init_params
+from repro.models.topology import build_topology, build_serve_topology
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainConfig, make_train_step
+
+
+def _setup(arch="qwen3-1.7b", **tc_kw):
+    cfg = get(arch).scaled_for_smoke()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    topo = build_topology(cfg, mesh)
+    tc = TrainConfig(warmup=2, lr=1e-3, **tc_kw)
+    params = init_params(cfg, topo, seed=0)
+    opt = adamw.init_state(params, tc.adamw)
+    return cfg, topo, tc, params, opt
+
+
+def test_trainer_loop_with_checkpoint_restart():
+    from repro.checkpoint.manager import CheckpointManager
+    cfg, topo, tc, params, opt = _setup()
+    dc = DataConfig(seq_len=32, global_batch=2, vocab_size=cfg.vocab_size)
+    stream = TokenStream(cfg, dc)
+
+    def batches(lo, hi):
+        for s in range(lo, hi):
+            yield {k: jnp.asarray(v)
+                   for k, v in stream.global_batch_at(s).items()}
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        tr = Trainer(cfg, topo, tc, checkpointer=mgr)
+        p1, o1, h1 = tr.run(params, opt, batches(0, 6), checkpoint_every=3,
+                            log_every=0, log=lambda *_: None)
+        # simulate failure + restart from latest checkpoint
+        step = mgr.latest_step()
+        assert step == 6
+        p2, o2 = mgr.restore(step, params, opt)
+        tr2 = Trainer(cfg, topo, tc, checkpointer=mgr)
+        p3, o3, h3 = tr2.run(p2, o2, batches(6, 8), start_step=6,
+                             log_every=0, log=lambda *_: None)
+        assert np.isfinite(h3[-1]["loss"])
+
+
+def test_straggler_deadline_counter():
+    cfg, topo, tc, params, opt = _setup()
+    tc = dataclasses.replace(tc, step_deadline_s=1e-9)  # everything is slow
+    dc = DataConfig(seq_len=32, global_batch=2, vocab_size=cfg.vocab_size)
+    stream = TokenStream(cfg, dc)
+    tr = Trainer(cfg, topo, tc)
+    batches = ({k: jnp.asarray(v)
+                for k, v in stream.global_batch_at(s).items()}
+               for s in range(3))
+    tr.run(params, opt, batches, log_every=0, log=lambda *_: None)
+    assert tr.slow_steps == 3
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 48]))
+@settings(max_examples=8, deadline=None)
+def test_property_loss_invariant_to_masked_rows(seed, S):
+    """Masked (-1) labels never contribute: appending a fully-masked row
+    leaves the loss unchanged (vocab-parallel CE invariant)."""
+    cfg, topo, tc, params, opt = _setup()
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.models.lm import Model
+    from repro.models.params import param_specs
+    from repro.runtime.trainer import input_batch_specs
+    model = Model(cfg, topo)
+    fn = jax.jit(shard_map(
+        lambda p, b: model.loss_shard(p, b)[0], mesh=topo.cube.mesh,
+        in_specs=(param_specs(cfg, topo), input_batch_specs(cfg, topo)),
+        out_specs=P(), check_vma=False))
+    rng = np.random.RandomState(seed % 10000)
+    toks = rng.randint(0, cfg.vocab_size, (2, S)).astype(np.int32)
+    labels = rng.randint(0, cfg.vocab_size, (2, S)).astype(np.int32)
+    l1 = float(fn(params, {"tokens": jnp.asarray(toks),
+                           "labels": jnp.asarray(labels)}))
+    toks2 = np.concatenate([toks, toks[:1]], 0)
+    labels2 = np.concatenate([labels, np.full((1, S), -1, np.int32)], 0)
+    l2 = float(fn(params, {"tokens": jnp.asarray(toks2),
+                           "labels": jnp.asarray(labels2)}))
+    assert abs(l1 - l2) < 5e-3, (l1, l2)
+
+
+def test_serve_topology_geometry():
+    """Serve-time maximal model sharding divides every arch's dimensions."""
+    from repro.configs import ARCH_IDS
+    per_pod = 256
+    for arch in ARCH_IDS:
+        cfg = get(arch)
+        if cfg.n_experts:
+            ep = min(cfg.n_experts_padded, per_pod)
+            assert per_pod % ep == 0
+            assert cfg.d_ff_expert % (per_pod // ep) == 0, arch
+        else:
+            tp = min(per_pod, cfg.serve_tp or per_pod)
+            assert cfg.d_ff % tp == 0, arch
+            if cfg.n_heads:
+                assert (cfg.n_heads * cfg.head_dim) % tp == 0, arch
