@@ -16,7 +16,7 @@ from benchmarks._timing import bench, emit
 def _setup(shape, names):
     import jax
     import jax.numpy as jnp
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core.hypercube import Hypercube
     from repro.core.collectives import Collectives
@@ -28,7 +28,7 @@ def _setup(shape, names):
 
 def _smap_call(cube, f, in_specs, out_specs, *args):
     import jax
-    from jax import shard_map
+    from repro.compat import shard_map
     fn = jax.jit(shard_map(f, mesh=cube.mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False))
     return lambda: jax.block_until_ready(fn(*args))

@@ -10,7 +10,7 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get

@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import Collectives

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.hypercube import Hypercube
 
 Array = jax.Array
@@ -65,8 +66,10 @@ _REDUCERS = {
 _LADDER_MAX = 32
 
 
-def _stage(primitive: str, algorithm: str) -> str:
-    """Resolve an algorithm request against Table II."""
+def resolve_stage(primitive: str, algorithm: str) -> str:
+    """Resolve an algorithm request against Table II: ``pidcomm`` means the
+    strongest applicable stage; an inapplicable request falls back to the
+    strongest applicable stage at or below it."""
     stages = APPLICABILITY[primitive]
     if algorithm == "pidcomm":
         return stages[-1]
@@ -79,6 +82,9 @@ def _stage(primitive: str, algorithm: str) -> str:
         if order.index(s) <= req:
             best = s
     return best
+
+
+_stage = resolve_stage  # internal alias kept for brevity at call sites
 
 
 def _split_axis_to_front(x: Array, axis: int, groups: int) -> Array:
@@ -128,7 +134,7 @@ class Collectives:
             return self._aa_ladder(x, ax, g, split_axis, concat_axis)
         # naive / pr: replicated intermediate over the group ("host buffer").
         blocks = _split_axis_to_front(x, split_axis, g)       # (G, ..., b, ..)
-        gathered = lax.all_gather(blocks, ax, axis=0, tiled=False)  # (G, G, ..)
+        gathered = compat.all_gather(blocks, ax, axis=0, tiled=False)  # (G, G, ..)
         me = lax.axis_index(ax)
         if stage == "pr":
             # PE-assisted reordering: sources pre-arranged their blocks so the
@@ -170,13 +176,13 @@ class Collectives:
         stage = _stage("reduce_scatter", algorithm)
         if stage == "im":
             if op == "add":
-                return lax.psum_scatter(x, ax, scatter_dimension=axis, tiled=True)
+                return compat.psum_scatter(x, ax, scatter_dimension=axis)
             red = _REDUCERS[op][0](x, ax)
             blocks = _split_axis_to_front(red, axis, g)
             me = lax.axis_index(ax)
             return lax.dynamic_index_in_dim(blocks, me, axis=0, keepdims=False)
         blocks = _split_axis_to_front(x, axis, g)              # (G, ..., b, ..)
-        gathered = lax.all_gather(blocks, ax, axis=0, tiled=False)  # (Gsrc, Gblk, ...)
+        gathered = compat.all_gather(blocks, ax, axis=0, tiled=False)  # (Gsrc, Gblk, ...)
         me = lax.axis_index(ax)
         col = lax.dynamic_index_in_dim(gathered, me, axis=1, keepdims=False)
         if stage == "pr":
@@ -201,9 +207,9 @@ class Collectives:
         if stage in ("im", "cm"):
             # direct tiled gather; with CM the consumer reads the gathered
             # layout in place (no post-reorder op survives fusion).
-            return lax.all_gather(x, ax, axis=axis, tiled=True)
+            return compat.all_gather(x, ax, axis=axis)
         if stage == "pr":
-            gathered = lax.all_gather(x, ax, axis=0, tiled=False)
+            gathered = compat.all_gather(x, ax, axis=0, tiled=False)
             return _merge_front_blocks(gathered, axis)
         # naive: root collects then broadcasts full copies -- emulated by a
         # masked psum carrying G full-size buffers over the bus.
@@ -230,16 +236,15 @@ class Collectives:
                 pad = (-flat.shape[0]) % gf
                 if pad:
                     flat = jnp.pad(flat, (0, pad))
-                shard = lax.psum_scatter(flat, fast, scatter_dimension=0,
-                                         tiled=True)
+                shard = compat.psum_scatter(flat, fast, scatter_dimension=0)
                 shard = lax.psum(shard, slow)
-                full = lax.all_gather(shard, fast, axis=0, tiled=True)
+                full = compat.all_gather(shard, fast, axis=0)
                 if pad:
                     full = full[:-pad]
                 return full.reshape(x.shape)
             return _REDUCERS[op][0](x, ax)
         g = self.cube.group_size(ax)
-        gathered = lax.all_gather(x, ax, axis=0, tiled=False)
+        gathered = compat.all_gather(x, ax, axis=0, tiled=False)
         if stage == "pr":
             return _REDUCERS[op][1](gathered, axis=0)
         comb = _REDUCERS[op][2]
@@ -251,24 +256,34 @@ class Collectives:
     # --------------------------------------------------- rooted (host) four
     # The host is always the root (paper §IV-B3). These run at the jit
     # boundary on global arrays; one buffer per cube slice, like the paper's
-    # per-group host buffers.
-    def scatter(self, host_value, dims, *, axis: int):
+    # per-group host buffers. The ``algorithm`` request is resolved against
+    # Table II for a uniform API, but the device path is stage-invariant:
+    # at the jit boundary the runtime's native host<->device transfer *is*
+    # the in-register path, so naive/pr only differ in the emulated host
+    # flow the paper ablates, not in bytes placed on devices.
+    def scatter(self, host_value, dims, *, axis: int,
+                algorithm: str = "pidcomm"):
         """Host -> PEs: partition ``host_value`` along ``axis`` over ``dims``."""
+        _stage("scatter", algorithm)
         ax = self.cube.resolve_dims(dims)
         spec = [None] * host_value.ndim
         spec[axis] = ax if len(ax) > 1 else ax[0]
         return jax.device_put(host_value, self.cube.sharding(P(*spec)))
 
-    def broadcast(self, host_value):
+    def broadcast(self, host_value, *, algorithm: str = "pidcomm"):
         """Host -> PEs: replicate to every node."""
+        _stage("broadcast", algorithm)
         return jax.device_put(host_value, self.cube.sharding(P()))
 
-    def gather(self, x):
+    def gather(self, x, *, algorithm: str = "pidcomm"):
         """PEs -> host: materialize the global array in host memory."""
+        _stage("gather", algorithm)
         return jax.device_get(x)
 
-    def reduce(self, x, *, op: str = "add", axis: int = 0):
+    def reduce(self, x, *, op: str = "add", axis: int = 0,
+               algorithm: str = "pidcomm"):
         """PEs -> host: reduction over the sharded axis, result on host."""
+        _stage("reduce", algorithm)
         reducer = {"add": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
         return jax.device_get(reducer(x, axis=axis))
 

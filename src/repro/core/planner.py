@@ -31,11 +31,12 @@ DCN_BW = 3.125e9
 @dataclasses.dataclass(frozen=True)
 class CommEstimate:
     primitive: str
-    algorithm: str
+    algorithm: str                     # naive | hierarchical | direct
     schedule: tuple[str, ...]          # human-readable hop list
     ici_bytes: float                   # per-device bytes over ICI
     dcn_bytes: float                   # per-device bytes over DCN
     seconds: float
+    stage: str = ""                    # the Table II stage this flow maps to
 
     def dominant(self) -> str:
         return "dcn" if self.dcn_bytes / DCN_BW > self.ici_bytes / ICI_BW \
@@ -63,10 +64,29 @@ def _group_bytes(primitive: str, payload: float, g: int) -> float:
     }[primitive]
 
 
+def _table_ii_stage(primitive: str, algorithm: str) -> str:
+    """Map a planner flow onto the Table II stage it corresponds to."""
+    from repro.core.collectives import resolve_stage
+    if algorithm == "naive":
+        return "naive"
+    # hierarchical / direct both run the runtime's best native flow
+    return resolve_stage(primitive, "pidcomm")
+
+
 def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
              algorithm: str = "pidcomm") -> CommEstimate:
     """Estimate one collective. ``payload_bytes`` is the per-device payload
-    (for all_gather: the local shard; for others: the local buffer)."""
+    (for all_gather: the local shard; for others: the local buffer).
+
+    ``algorithm``: ``naive`` (replicated-intermediate host flow),
+    ``direct`` (one flat native collective over the whole group, even when
+    it crosses DCN), or ``pidcomm``/``hierarchical`` (the §IX-A split
+    whenever the primitive is an all-reduce spanning both domains; like the
+    runtime, the request *falls back to direct* otherwise -- check the
+    returned ``algorithm`` field when the distinction matters).
+    """
+    if algorithm not in ("pidcomm", "naive", "direct", "hierarchical"):
+        raise ValueError(f"unknown planner algorithm {algorithm!r}")
     sel = cube.resolve_dims(dims)
     fast, slow = cube.split_fast_slow(sel)
     gf = int(np.prod([cube.size(d) for d in fast])) if fast else 1
@@ -81,9 +101,10 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         sched = (f"allgather-full[{'x'.join(sel)}]", "local-modulate",
                  "local-slice")
         return CommEstimate(primitive, "naive", sched, ici, dcn,
-                            _bw_time(ici, dcn))
+                            _bw_time(ici, dcn), "naive")
 
-    if primitive == "all_reduce" and gs > 1 and gf > 1:
+    if (algorithm != "direct" and primitive == "all_reduce"
+            and gs > 1 and gf > 1):
         # hierarchical §IX-A
         ici = 2 * payload_bytes * (gf - 1) / gf
         dcn = 2 * (payload_bytes / gf) * (gs - 1) / gs
@@ -91,7 +112,8 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
                  f"all_reduce[{'x'.join(slow)}]",
                  f"all_gather[{'x'.join(fast)}]")
         return CommEstimate(primitive, "hierarchical", sched, ici, dcn,
-                            _bw_time(ici, dcn))
+                            _bw_time(ici, dcn),
+                            _table_ii_stage(primitive, "hierarchical"))
 
     ici = _group_bytes(primitive, payload_bytes, gf) if gf > 1 else 0.0
     # direct over a pod-crossing group: the (gs-1)/gs fraction crosses DCN
@@ -101,17 +123,23 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         dcn = total
     sched = (f"{primitive}[{'x'.join(sel)}]",)
     return CommEstimate(primitive, "direct", sched, ici, dcn,
-                        _bw_time(ici, dcn))
+                        _bw_time(ici, dcn),
+                        _table_ii_stage(primitive, "direct"))
 
 
 def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float
          ) -> CommEstimate:
-    """Pick the fastest applicable algorithm for this primitive/group."""
+    """Pick the fastest flow for this primitive/group among the naive
+    host flow, the flat direct collective, and (when the group spans both
+    domains) the hierarchical split."""
     cands = [estimate(cube, primitive, dims, payload_bytes, a)
-             for a in ("pidcomm",)]
+             for a in ("naive", "direct", "pidcomm")]
     # int8 compression halves/quarters the DCN hop; the trainer decides
     # whether the accuracy contract allows it -- we only report the estimate.
-    return min(cands, key=lambda e: e.seconds)
+    # Tie-break away from naive: when the byte model can't separate the host
+    # flow from the native collective, the runtime still executes the native
+    # one, and the reported stage must reflect that.
+    return min(cands, key=lambda e: (e.seconds, e.algorithm == "naive"))
 
 
 def matmul_time(m: int, n: int, k: int, dtype_bytes: int = 2) -> float:

@@ -18,7 +18,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

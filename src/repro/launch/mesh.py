@@ -4,17 +4,16 @@ The production target is TPU v5e: one pod = a 16x16 ICI-connected slice
 (256 chips), two pods connected over DCN for the multi-pod configuration.
 ``make_production_mesh`` is a function (never a module-level constant) so that
 importing this module never touches jax device state.
+
+Mesh construction is version-sensitive (``AxisType`` only exists on jax
+0.5+), so it lives in :mod:`repro.compat`; this module re-exports it so all
+launch-path callers keep their import site.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
-
-def make_mesh(shape, axes):
-    """jax.make_mesh with explicit Auto axis types (JAX 0.8/0.9 compatible)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+__all__ = ["make_mesh", "make_production_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -20,7 +20,7 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro import configs
     from repro.launch.mesh import make_mesh

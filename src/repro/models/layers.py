@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -38,25 +40,22 @@ def probe_trips(n: int) -> int:
 
 def pvary_like(x, *refs):
     """Promote ``x``'s varying-axes (shard_map vma) to the union of the
-    refs' -- needed for scan carries initialized from constants."""
+    refs' -- needed for scan carries initialized from constants. No-op on
+    pre-vma jax (compat.HAS_VMA False), where nothing is tracked."""
     want = frozenset()
     for r in refs:
-        want = want | getattr(jax.typeof(r), "vma", frozenset())
-    have = getattr(jax.typeof(x), "vma", frozenset())
-    need = tuple(sorted(want - have))
-    if not need:
-        return x
-    return lax.pcast(x, need, to="varying")
+        want = want | compat.vma_of(r)
+    need = tuple(sorted(want - compat.vma_of(x)))
+    return compat.pvary(x, need) if need else x
 
 
 def pvary_axes(x, axes):
     """Mark ``x`` as varying over ``axes`` (no-op outside shard_map/vma)."""
-    have = getattr(jax.typeof(x), "vma", frozenset())
-    need = tuple(a for a in axes if a not in have)
+    need = tuple(a for a in axes if a not in compat.vma_of(x))
     if not need:
         return x
     try:
-        return lax.pcast(x, need, to="varying")
+        return compat.pvary(x, need)
     except Exception:
         return x
 

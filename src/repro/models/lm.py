@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
 from repro.models import blocks, layers
 from repro.models.config import (
     ModelConfig, ATTN, MAMBA, RWKV, DENSE, MOE, RWKVCM, FULL_WINDOW)
@@ -247,13 +248,14 @@ class Model:
             lc = lax.dynamic_slice_in_dim(labels, i * Ck, Ck, axis=1)
             logits = (hc @ head).astype(jnp.float32)           # (B,Ck,Vl)
             m = lax.pmax(lax.stop_gradient(logits.max(-1)), topo.tp)
-            se = lax.psum(jnp.exp(logits - m[..., None]).sum(-1), topo.tp)
+            se = compat.replicated_psum(
+                jnp.exp(logits - m[..., None]).sum(-1), topo.tp)
             lse = jnp.log(se) + m
             ids = lc - lo
             ok = (ids >= 0) & (ids < Vl)
             tl = jnp.take_along_axis(
                 logits, jnp.clip(ids, 0, Vl - 1)[..., None], axis=-1)[..., 0]
-            tl = lax.psum(jnp.where(ok, tl, 0.0), topo.tp)
+            tl = compat.replicated_psum(jnp.where(ok, tl, 0.0), topo.tp)
             msk = (lc >= 0).astype(jnp.float32)
             tot = tot + ((lse - tl) * msk).sum()
             cnt = cnt + msk.sum()
@@ -261,11 +263,13 @@ class Model:
 
         zero = layers.pvary_axes(jnp.zeros(()), topo.dp)
         (tot, cnt), _ = layers.pscan(ce, (zero, zero + 0.0), jnp.arange(nck))
-        tot = lax.psum(layers.pvary_axes(tot, topo.dp), topo.dp)
-        cnt = lax.psum(layers.pvary_axes(cnt, topo.dp), topo.dp)
+        tot = compat.replicated_psum(layers.pvary_axes(tot, topo.dp),
+                                     topo.dp)
+        cnt = compat.replicated_psum(layers.pvary_axes(cnt, topo.dp),
+                                     topo.dp)
         loss = tot / jnp.maximum(cnt, 1.0)
         aux = layers.pvary_axes(aux, topo.dp + topo.tp)
-        aux_all = lax.psum(aux, topo.dp + topo.tp) / (
+        aux_all = compat.replicated_psum(aux, topo.dp + topo.tp) / (
             topo.dp_size * topo.tp_size)
         metrics = {"ce_loss": loss, "aux_loss": aux_all, "tokens": cnt}
         return loss + AUX_COEF * aux_all, metrics

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
@@ -46,18 +46,45 @@ class TrainConfig:
     step_deadline_s: float = 0.0       # 0 = no straggler deadline
 
 
-def _replication_factor(spec, topo: Topology) -> int:
+def _spec_axes(spec) -> set:
+    """Mesh axes a PartitionSpec shards over."""
     present = set()
     for entry in tuple(spec):
         if entry is None:
             continue
         for ax in (entry if isinstance(entry, tuple) else (entry,)):
             present.add(ax)
+    return present
+
+
+def _replication_factor(spec, topo: Topology) -> int:
+    present = _spec_axes(spec)
     repl = 1
     for name, size in zip(topo.cube.dim_names, topo.cube.dim_sizes):
         if name not in present:
             repl *= size
     return repl
+
+
+def sync_replicated_grads(grads, specs, cube):
+    """Insert the gradient psums that vma-aware autodiff (check_vma=True on
+    jax 0.5+) derives automatically: each leaf's per-shard gradient must be
+    summed over every cube axis its spec does not shard (its replication
+    axes), because sharded compute feeding a replicated parameter leaves one
+    partial contribution per shard. No-op when the installed jax tracks
+    varying axes in avals (compat.HAS_VMA)."""
+    from repro import compat
+    if compat.HAS_VMA:
+        return grads
+    flat, tdef = jax.tree.flatten(grads)
+    sflat = tdef.flatten_up_to(specs)
+    out = []
+    for g, s in zip(flat, sflat):
+        present = _spec_axes(s)
+        missing = tuple(d for d, n in zip(cube.dim_names, cube.dim_sizes)
+                        if d not in present and n > 1)
+        out.append(lax.psum(g, missing) if missing else g)
+    return jax.tree.unflatten(tdef, out)
 
 
 def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
@@ -76,6 +103,8 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
         # the sharding structure.
         (loss, metrics), grads = jax.value_and_grad(
             model.loss_shard, has_aux=True)(params, batch)
+        # pre-vma jax: restore the replicated-leaf psums by hand
+        grads = sync_replicated_grads(grads, specs, topo.cube)
 
         # global-norm clip (replication-aware: local sum-of-squares divided
         # by each leaf's replication degree, then summed over the full cube)

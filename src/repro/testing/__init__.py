@@ -1,0 +1,7 @@
+"""Verification subsystem: NumPy golden oracles for the eight PID-Comm
+primitives and a virtual-PE substrate for differential conformance testing.
+
+``oracles``    pure-NumPy reference semantics, multi-instance included.
+``substrate``  boots an N-device host-platform hypercube and runs per-shard
+               collectives under shard_map for comparison against the oracles.
+"""

@@ -1,0 +1,170 @@
+"""Pure-NumPy golden implementations of the eight PID-Comm primitives.
+
+These are the independent references the conformance suite checks every
+``(primitive, stage, dim-selection)`` cell of ``collectives.APPLICABILITY``
+against, the way SimplePIM validates its PIM operators against host code.
+
+Layout convention -- the paper's multi-instance block layout (§IV-B3):
+
+  A *global* array has shape ``(*cube_shape, *payload)``: one leading axis
+  per hypercube dimension (outermost first, matching
+  ``Hypercube.dim_names``), then the per-PE local payload. Entry
+  ``x[i0, i1, ..., ik]`` is PE ``(i0, ..., ik)``'s local block.
+
+  A collective over ``group_axes`` (indices into the leading cube axes)
+  runs one independent instance per assignment of the remaining (instance)
+  axes -- the cube slices of §IV-B3. Group members are linearized in cube
+  (major -> minor) order, which is how ``jax.lax`` linearizes a tuple of
+  axis names, so oracle member ``r`` is the PE with
+  ``lax.axis_index(dims) == r``.
+
+Payload axis arguments (``axis`` / ``split_axis`` / ``concat_axis``) are
+*payload-relative*: 0 is the first payload axis. Callers running the real
+collectives inside ``shard_map`` over the same layout pass
+``cube_ndim + axis`` instead, because per-shard arrays keep their leading
+singleton cube axes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+_REDUCE = {"add": np.sum, "max": np.max, "min": np.min}
+
+
+def _norm_axes(cube_ndim: int, group_axes: Sequence[int]) -> tuple[int, ...]:
+    axes = tuple(sorted(int(a) for a in group_axes))
+    if len(set(axes)) != len(axes) or not axes:
+        raise ValueError(f"bad group axes {group_axes}")
+    if any(a < 0 or a >= cube_ndim for a in axes):
+        raise ValueError(f"group axes {axes} outside cube ndim {cube_ndim}")
+    return axes
+
+
+def _to_group_view(x: np.ndarray, cube_ndim: int, axes: tuple[int, ...]):
+    """(*cube, *payload) -> (G, *instance, *payload) plus the inverse perm.
+
+    Group axes move to the front (cube order preserved) and flatten to one
+    axis of size G; member r is the cube-order linearization of the selected
+    coordinates, matching ``lax.axis_index`` over a tuple of names.
+    """
+    inst = tuple(i for i in range(cube_ndim) if i not in axes)
+    perm = axes + inst + tuple(range(cube_ndim, x.ndim))
+    y = np.transpose(x, perm)
+    gshape = y.shape[:len(axes)]
+    g = int(np.prod(gshape)) if gshape else 1
+    y = y.reshape((g,) + y.shape[len(axes):])
+
+    def inverse(z: np.ndarray) -> np.ndarray:
+        """(G, *instance, *payload') -> (*cube, *payload')."""
+        z = z.reshape(gshape + z.shape[1:])
+        inv = np.argsort(perm)
+        return np.transpose(z, inv)
+
+    return y, g, inverse
+
+
+def all_reduce(x: np.ndarray, cube_ndim: int, group_axes, op: str = "add"
+               ) -> np.ndarray:
+    """Every member of every group holds the group reduction. Same shape."""
+    axes = _norm_axes(cube_ndim, group_axes)
+    y, g, inv = _to_group_view(x, cube_ndim, axes)
+    red = _REDUCE[op](y, axis=0, keepdims=True)
+    return inv(np.broadcast_to(red, y.shape).copy())
+
+
+def reduce_scatter(x: np.ndarray, cube_ndim: int, group_axes, *, axis: int,
+                   op: str = "add") -> np.ndarray:
+    """Member r keeps chunk r of the group reduction along payload ``axis``.
+    Output payload axis shrinks by the group size."""
+    axes = _norm_axes(cube_ndim, group_axes)
+    y, g, inv = _to_group_view(x, cube_ndim, axes)
+    pay_axis = (y.ndim - (x.ndim - cube_ndim)) + axis
+    if y.shape[pay_axis] % g:
+        raise ValueError(
+            f"payload axis {axis} ({y.shape[pay_axis]}) not divisible by {g}")
+    red = _REDUCE[op](y, axis=0)                        # (*inst, *payload)
+    chunks = np.split(red, g, axis=pay_axis - 1)        # one axis gone
+    return inv(np.stack(chunks, axis=0))
+
+
+def all_gather(x: np.ndarray, cube_ndim: int, group_axes, *, axis: int
+               ) -> np.ndarray:
+    """Every member holds the group-order concatenation along ``axis``.
+    Output payload axis grows by the group size."""
+    axes = _norm_axes(cube_ndim, group_axes)
+    y, g, inv = _to_group_view(x, cube_ndim, axes)
+    pay_axis = (y.ndim - (x.ndim - cube_ndim)) + axis
+    full = np.concatenate([y[r] for r in range(g)], axis=pay_axis - 1)
+    return inv(np.broadcast_to(full[None], (g,) + full.shape).copy())
+
+
+def all_to_all(x: np.ndarray, cube_ndim: int, group_axes, *,
+               split_axis: int, concat_axis: int) -> np.ndarray:
+    """Member j's output block i (along ``concat_axis``) is member i's input
+    block j (along ``split_axis``) -- the paper's transpose semantics."""
+    axes = _norm_axes(cube_ndim, group_axes)
+    y, g, inv = _to_group_view(x, cube_ndim, axes)
+    pay0 = y.ndim - (x.ndim - cube_ndim)        # first payload axis in view
+    sa, ca = pay0 + split_axis, pay0 + concat_axis
+    if y.shape[sa] % g:
+        raise ValueError(
+            f"split axis {split_axis} ({y.shape[sa]}) not divisible by {g}")
+    b = y.shape[sa] // g
+    # (G_src, ..., G_blk * b, ...) -> (G_src, G_blk, ..., b, ...)
+    blocks = np.stack(np.split(y, g, axis=sa), axis=1)
+    swapped = np.swapaxes(blocks, 0, 1)         # member j <- block j of all
+    out = np.concatenate([swapped[:, s] for s in range(g)], axis=ca)
+    return inv(out)
+
+
+# ------------------------------------------------------------- rooted four
+def scatter(host_value: np.ndarray, cube_shape: Sequence[int], group_axes, *,
+            axis: int) -> np.ndarray:
+    """Host -> PEs. Expected *local block* of every PE, in global layout:
+    member r of the selected group gets chunk r of ``host_value`` along
+    ``axis``; the result is replicated over the instance axes."""
+    cube_shape = tuple(int(s) for s in cube_shape)
+    cube_ndim = len(cube_shape)
+    axes = _norm_axes(cube_ndim, group_axes)
+    g = int(np.prod([cube_shape[a] for a in axes]))
+    if host_value.shape[axis] % g:
+        raise ValueError(
+            f"axis {axis} ({host_value.shape[axis]}) not divisible by {g}")
+    chunks = np.stack(np.split(host_value, g, axis=axis), axis=0)
+    out = np.empty(cube_shape + chunks.shape[1:], chunks.dtype)
+    gsizes = [cube_shape[a] for a in axes]
+    for coord in np.ndindex(*cube_shape):
+        r = 0
+        for a, s in zip(axes, gsizes):
+            r = r * s + coord[a]
+        out[coord] = chunks[r]
+    return out
+
+
+def gather(local_blocks: np.ndarray, cube_ndim: int, group_axes, *,
+           axis: int) -> np.ndarray:
+    """PEs -> host: reassemble the global array from the per-PE blocks in
+    global layout -- the inverse of :func:`scatter` (instance axis 0 slice)."""
+    axes = _norm_axes(cube_ndim, group_axes)
+    y, g, _ = _to_group_view(local_blocks, cube_ndim, axes)
+    inst_ndim = cube_ndim - len(axes)
+    first = y[(slice(None),) + (0,) * inst_ndim]     # instance-replicated
+    pay_axis = axis
+    return np.concatenate([first[r] for r in range(g)], axis=pay_axis)
+
+
+def reduce(x: np.ndarray, *, axis: int = 0, op: str = "add") -> np.ndarray:
+    """PEs -> host: reduction of the global array over the sharded axis
+    (the runtime's rooted reduce runs on the global view at the jit
+    boundary, so the oracle is a plain NumPy reduction)."""
+    return _REDUCE[op](x, axis=axis)
+
+
+def broadcast(host_value: np.ndarray, cube_shape: Sequence[int]
+              ) -> np.ndarray:
+    """Host -> PEs: every PE holds the full buffer."""
+    cube_shape = tuple(int(s) for s in cube_shape)
+    return np.broadcast_to(
+        host_value, cube_shape + host_value.shape).copy()

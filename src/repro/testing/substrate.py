@@ -1,0 +1,155 @@
+"""Virtual-PE substrate: boot a multi-device hypercube on one host and run
+per-shard collectives under ``shard_map`` for differential comparison
+against the NumPy oracles.
+
+The XLA host platform can emulate any device count
+(``--xla_force_host_platform_device_count``), but only if the flag is set
+*before* jax initializes its backends -- ``ensure_virtual_devices`` handles
+the env var, ``tests/conftest.py`` calls it before anything imports jax.
+
+Global layout matches :mod:`repro.testing.oracles`: arrays are
+``(*cube.dim_sizes, *payload)``, fully sharded over the logical mesh, so
+every PE's per-shard view is ``(1, ..., 1, *payload)`` and the runner's
+output is directly comparable to an oracle result. Payload axis arguments
+to the real collectives are therefore ``cube.ndim + payload_axis``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_virtual_devices(n: int = 8) -> None:
+    """Arrange for >= ``n`` host devices. Must run before jax initializes;
+    raises with a recipe if jax is already up with too few devices."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{_FLAG}={n} {flags}".strip()
+    import jax  # deferred: the env var must be set before backend init
+    if jax.device_count() < n:
+        raise RuntimeError(
+            f"need {n} devices, have {jax.device_count()}; set "
+            f"XLA_FLAGS={_FLAG}={n} before importing jax "
+            "(tests/conftest.py does this for the suite)")
+
+
+# ------------------------------------------------------------------- cubes
+# The conformance shapes: a 1-D ring, a 2-D rectangle, a 3-D cube whose
+# bitmap selections exercise multi-instance groups, and a pod-crossing cube
+# whose outermost dim lives on the DCN (slow) domain.
+CUBE_SPECS: Mapping[str, tuple[tuple[int, ...], tuple[str, ...], dict]] = {
+    "ring8": ((8,), ("d",), {"d": 8}),
+    "2x4": ((2, 4), ("data", "model"), {"r": 2, "c": 4}),
+    "2x2x2": ((2, 2, 2), ("a", "b", "c"), {"a": 2, "b": 2, "c": 2}),
+    "pod2x2x2": ((2, 2, 2), ("pod", "data", "model"),
+                 {"pod": 2, "dp": 2, "tp": 2}),
+}
+
+
+def build_cube(name: str):
+    """Build one of the named conformance hypercubes (8 virtual devices)."""
+    from repro.compat import make_mesh
+    from repro.core.hypercube import Hypercube
+    shape, axes, dims = CUBE_SPECS[name]
+    return Hypercube.build(make_mesh(shape, axes), dims)
+
+
+class _FakeMesh:
+    """Device-free Mesh stand-in: Hypercube.build only reads ``.devices``
+    (shape + flat order) and ``.axis_names``, so a numpy arange works."""
+
+    def __init__(self, shape, names):
+        self.devices = np.arange(int(np.prod(shape))).reshape(shape)
+        self.axis_names = names
+
+
+def fake_cube(phys_shape, phys_names, dims):
+    """Hypercube over a fake physical mesh -- exercises the mapping and
+    validation logic (pod-boundary rule, power-of-two rule, planner inputs)
+    for arbitrary device counts without touching jax device state."""
+    import repro.core.hypercube as hc
+    mesh = _FakeMesh(phys_shape, phys_names)
+    orig = hc.Mesh
+    hc.Mesh = lambda devs, names: type(
+        "M", (), {"devices": devs, "axis_names": tuple(names)})()
+    try:
+        return hc.Hypercube.build(mesh, dims)
+    finally:
+        hc.Mesh = orig
+
+
+# ------------------------------------------------------------------ layout
+def global_spec(cube, payload_ndim: int):
+    """PartitionSpec sharding every cube axis, payload unsharded."""
+    from jax.sharding import PartitionSpec as P
+    return P(*cube.dim_names, *([None] * payload_ndim))
+
+
+def integer_payload(cube, payload_shape: Sequence[int], dtype=np.float32,
+                    *, seed: int = 0, lo: int = -4, hi: int = 5
+                    ) -> np.ndarray:
+    """Global-layout array of small random integers. Integer values make
+    fp32/bf16 sums exact, so different reduction orders (naive sequential,
+    pr vectorized, im psum) must agree *bit-identically* -- the conformance
+    suite's stage-equivalence contract."""
+    rng = np.random.RandomState(seed)
+    shape = tuple(cube.dim_sizes) + tuple(payload_shape)
+    return rng.randint(lo, hi, shape).astype(dtype)
+
+
+def run_per_shard(cube, fn: Callable, x: np.ndarray,
+                  payload_ndim: int | None = None,
+                  out_payload_ndim: int | None = None) -> np.ndarray:
+    """Run per-shard ``fn`` under shard_map over ``cube`` on a global-layout
+    array; returns the global-layout result as NumPy.
+
+    In/out specs shard every cube axis, so each shard sees
+    ``(1, ..., 1, *payload)`` and the output lands back in oracle layout
+    (for group-replicated results, every member's copy is materialized --
+    exactly what the oracles produce)."""
+    import jax
+    from repro.compat import shard_map
+    if payload_ndim is None:
+        payload_ndim = x.ndim - len(cube.dim_sizes)
+    if out_payload_ndim is None:
+        out_payload_ndim = payload_ndim
+    fn_sharded = jax.jit(shard_map(
+        fn, mesh=cube.mesh,
+        in_specs=global_spec(cube, payload_ndim),
+        out_specs=global_spec(cube, out_payload_ndim),
+        check_vma=False))
+    return np.asarray(fn_sharded(x))
+
+
+def local_blocks(cube, arr) -> np.ndarray:
+    """Per-PE local blocks of a sharded global array, in oracle layout
+    ``(*cube.dim_sizes, *local_shape)`` -- used to check that rooted
+    scatter/broadcast place the bytes the oracle says each PE owns."""
+    devs = cube.mesh.devices
+    by_id = {s.device.id: np.asarray(s.data) for s in arr.addressable_shards}
+    sample = next(iter(by_id.values()))
+    out = np.empty(devs.shape + sample.shape, sample.dtype)
+    for coord in np.ndindex(*devs.shape):
+        out[coord] = by_id[devs[coord].id]
+    return out
+
+
+def lowered_text(cube, fn: Callable, x: np.ndarray,
+                 payload_ndim: int | None = None) -> str:
+    """Lowered HLO of ``fn`` under shard_map -- for schedule assertions
+    (e.g. the §IX-A hierarchical all-reduce must contain reduce-scatter and
+    all-gather ops on the fast domain)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.compat import shard_map
+    if payload_ndim is None:
+        payload_ndim = x.ndim - len(cube.dim_sizes)
+    spec = global_spec(cube, payload_ndim)
+    return jax.jit(shard_map(
+        fn, mesh=cube.mesh, in_specs=spec, out_specs=spec,
+        check_vma=False)).lower(
+            jax.ShapeDtypeStruct(x.shape, jnp.dtype(x.dtype))).as_text()

@@ -1,0 +1,49 @@
+"""Shared pytest configuration for the suite.
+
+Must run before anything imports jax: the XLA host platform only honors
+``--xla_force_host_platform_device_count`` at backend init, so the flag is
+set at conftest import time (pytest imports conftest before test modules).
+The in-process suite then sees 8 virtual devices; the subprocess oracles
+(``multidev_check.py`` / ``parallel_check.py``) still set their own flags
+and are unaffected.
+"""
+import os
+
+# Before any jax import -- see module docstring.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")).strip()
+
+import pytest  # noqa: E402
+
+
+def _cube(name):
+    from repro.testing import substrate
+    substrate.ensure_virtual_devices(8)
+    return substrate.build_cube(name)
+
+
+@pytest.fixture(scope="session")
+def cube_ring8():
+    """1-D ring: 8 devices on one dim."""
+    return _cube("ring8")
+
+
+@pytest.fixture(scope="session")
+def cube_2x4():
+    """2-D rectangle: 2 x 4."""
+    return _cube("2x4")
+
+
+@pytest.fixture(scope="session")
+def cube_2x2x2():
+    """3-D cube a x b x c -- the multi-instance bitmap shapes."""
+    return _cube("2x2x2")
+
+
+@pytest.fixture(scope="session")
+def cube_pod():
+    """Pod-crossing 2x2x2 with ``pod`` as a DCN axis (paper §IX-A)."""
+    return _cube("pod2x2x2")

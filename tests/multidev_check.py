@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.core.hypercube import Hypercube
 from repro.core.collectives import (

@@ -14,7 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 import repro.models.params as params_mod
@@ -36,21 +36,23 @@ from repro.launch.mesh import make_mesh
 from repro.models.lm import Model
 from repro.models.params import init_params, param_specs
 from repro.models.topology import build_topology
-from repro.runtime.trainer import input_batch_specs
+from repro.runtime.trainer import input_batch_specs, sync_replicated_grads
 
 TOL = dict(rtol=5e-2, atol=5e-3)
 
 
 def grads_fn(cfg, topo):
     model = Model(cfg, topo)
+    specs = param_specs(cfg, topo)
 
     def f(params, batch):
-        # vma-aware autodiff inserts every needed gradient reduction
+        # vma-aware autodiff inserts every needed gradient reduction; on
+        # pre-vma jax sync_replicated_grads adds the same psums explicitly
         (loss, metrics), grads = jax.value_and_grad(
             model.loss_shard, has_aux=True)(params, batch)
+        grads = sync_replicated_grads(grads, specs, topo.cube)
         return loss, grads
 
-    specs = param_specs(cfg, topo)
     bspecs = input_batch_specs(cfg, topo)
     return jax.jit(shard_map(
         f, mesh=topo.cube.mesh, in_specs=(specs, bspecs),

@@ -1,0 +1,303 @@
+"""Conformance suite: every (primitive x applicable-stage x dim-selection)
+cell of paper Table II, executed on a virtual-PE hypercube and compared
+against the independent NumPy oracles (repro.testing.oracles).
+
+Contract per cell:
+  * oracle agreement -- the shard_map execution reproduces the golden
+    layout/values for every cube slice (multi-instance semantics, §IV-B3);
+  * bit-identical stage equivalence (fp32) -- reduction payloads are
+    integer-valued, so fp32 arithmetic is exact and every optimization
+    stage (naive -> pr -> im -> cm) must match the oracle *bitwise*; since
+    all stages equal the same oracle bitwise, they are bitwise equal to
+    each other, which is the paper's "same result, fewer bytes" claim as an
+    executed test rather than a comment.
+
+Also covered: the bitmap selections "010"/"110"/"011" (multi-instance
+groups), the _LADDER_MAX fall-through (im -> cm escalation), the
+hierarchical §IX-A all-reduce split over a DCN-crossing group, and the
+rooted host primitives' block placement.
+"""
+import numpy as np
+import pytest
+
+from repro.core import collectives as C
+from repro.core.collectives import APPLICABILITY, Collectives, resolve_stage
+from repro.testing import oracles, substrate
+
+# (cube fixture name, bitmap) cells. ring8 is the flat 8-wide group; the
+# 2x4 rectangle's "01" selects the 4-wide dim (2 instances); the 2x2x2
+# bitmaps exercise multi-instance groups (4, 2, 2 instances) and multi-dim
+# groups (the "110"/"011" tuple selections).
+SELECTIONS = [
+    ("cube_ring8", "1"),
+    ("cube_2x4", "01"),
+    ("cube_2x2x2", "010"),
+    ("cube_2x2x2", "110"),
+    ("cube_2x2x2", "011"),
+]
+
+
+def _sel(cube, bitmap):
+    names = cube.dims_from_bitmap(bitmap)
+    idx = tuple(cube.dim_names.index(d) for d in names)
+    return names, idx
+
+
+def _stages(primitive):
+    return APPLICABILITY[primitive] + ("pidcomm",)
+
+
+def _cells(primitive):
+    return [(cn, bm, st) for cn, bm in SELECTIONS
+            for st in _stages(primitive)]
+
+
+# ---------------------------------------------------------------- PE <-> PE
+@pytest.mark.parametrize("cube_name,bitmap,stage", _cells("all_reduce"))
+def test_all_reduce_conformance(cube_name, bitmap, stage, request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    col = Collectives(cube)
+    nd = len(cube.dim_sizes)
+    x = substrate.integer_payload(cube, (3, 5), seed=nd)
+    got = substrate.run_per_shard(
+        cube, lambda v: col.all_reduce(v, names, algorithm=stage), x)
+    want = oracles.all_reduce(x, nd, idx)
+    np.testing.assert_array_equal(got, want)  # bit-identical, fp32 exact
+
+
+@pytest.mark.parametrize("op", ["add", "min"])
+@pytest.mark.parametrize("cube_name,bitmap,stage", _cells("reduce_scatter"))
+def test_reduce_scatter_conformance(cube_name, bitmap, stage, op, request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    col = Collectives(cube)
+    nd = len(cube.dim_sizes)
+    g = cube.group_size(names)
+    x = substrate.integer_payload(cube, (2, 8 * g), seed=g)
+    got = substrate.run_per_shard(
+        cube,
+        lambda v: col.reduce_scatter(v, names, axis=nd + 1, op=op,
+                                     algorithm=stage),
+        x)
+    want = oracles.reduce_scatter(x, nd, idx, axis=1, op=op)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cube_name,bitmap,stage", _cells("all_gather"))
+def test_all_gather_conformance(cube_name, bitmap, stage, request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    col = Collectives(cube)
+    nd = len(cube.dim_sizes)
+    rng = np.random.RandomState(7)
+    shape = tuple(cube.dim_sizes) + (3, 4)
+    x = rng.randn(*shape).astype(np.float32)  # pure movement: any values
+    got = substrate.run_per_shard(
+        cube, lambda v: col.all_gather(v, names, axis=nd, algorithm=stage),
+        x)
+    want = oracles.all_gather(x, nd, idx, axis=0)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cube_name,bitmap,stage", _cells("all_to_all"))
+def test_all_to_all_conformance(cube_name, bitmap, stage, request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    col = Collectives(cube)
+    nd = len(cube.dim_sizes)
+    g = cube.group_size(names)
+    rng = np.random.RandomState(g)
+    shape = tuple(cube.dim_sizes) + (2, 4 * g)
+    x = rng.randn(*shape).astype(np.float32)
+    got = substrate.run_per_shard(
+        cube,
+        lambda v: col.all_to_all(v, names, split_axis=nd + 1,
+                                 concat_axis=nd + 1, algorithm=stage),
+        x)
+    want = oracles.all_to_all(x, nd, idx, split_axis=1, concat_axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("op", ["max", "min"])
+@pytest.mark.parametrize("stage", _stages("all_reduce"))
+def test_all_reduce_nonadd_ops(cube_ring8, op, stage):
+    col = Collectives(cube_ring8)
+    x = substrate.integer_payload(cube_ring8, (6,), seed=11)
+    got = substrate.run_per_shard(
+        cube_ring8,
+        lambda v: col.all_reduce(v, "d", op=op, algorithm=stage), x)
+    np.testing.assert_array_equal(got, oracles.all_reduce(x, 1, (0,), op=op))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, "bfloat16"])
+def test_dtype_sweep(cube_ring8, dtype):
+    """pidcomm all_reduce + all_to_all across payload dtypes."""
+    import jax.numpy as jnp
+    dt = jnp.bfloat16 if dtype == "bfloat16" else dtype
+    col = Collectives(cube_ring8)
+    x = substrate.integer_payload(cube_ring8, (16,), seed=3).astype(dt)
+    got = substrate.run_per_shard(
+        cube_ring8, lambda v: col.all_reduce(v, "d"), x)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float64),
+        oracles.all_reduce(np.asarray(x, np.float64), 1, (0,)))
+    got = substrate.run_per_shard(
+        cube_ring8,
+        lambda v: col.all_to_all(v, "d", split_axis=1, concat_axis=1), x)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float64),
+        oracles.all_to_all(np.asarray(x, np.float64), 1, (0,),
+                           split_axis=0, concat_axis=0))
+
+
+# -------------------------------------------------------- stage escalation
+def test_ladder_max_fallthrough(cube_ring8, monkeypatch):
+    """im all_to_all beyond _LADDER_MAX falls through to the fused cm
+    collective and must still match the oracle."""
+    monkeypatch.setattr(C, "_LADDER_MAX", 2)  # 8 > 2: forces the cm branch
+    col = Collectives(cube_ring8)
+    rng = np.random.RandomState(0)
+    x = rng.randn(8, 2, 16).astype(np.float32)
+    got = substrate.run_per_shard(
+        cube_ring8,
+        lambda v: col.all_to_all(v, "d", split_axis=2, concat_axis=2,
+                                 algorithm="im"), x)
+    want = oracles.all_to_all(x, 1, (0,), split_axis=1, concat_axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stage_resolution_table_ii():
+    """Requesting an inapplicable stage falls back to the strongest
+    applicable one at or below the request; pidcomm takes the ladder top."""
+    assert resolve_stage("reduce_scatter", "cm") == "im"
+    assert resolve_stage("scatter", "pr") == "naive"
+    assert resolve_stage("scatter", "cm") == "im"
+    assert resolve_stage("broadcast", "cm") == "naive"
+    for prim, stages in APPLICABILITY.items():
+        assert resolve_stage(prim, "pidcomm") == stages[-1]
+        for st in stages:  # applicable requests resolve to themselves
+            assert resolve_stage(prim, st) == st
+        with pytest.raises(ValueError):
+            resolve_stage(prim, "warp")
+
+
+# ------------------------------------------------------- hierarchical IX-A
+def test_hierarchical_all_reduce_dcn(cube_pod):
+    """Pod-crossing im all_reduce: oracle agreement plus the §IX-A schedule
+    (ICI reduce-scatter + DCN all-reduce + ICI all-gather) in the HLO."""
+    assert cube_pod.dcn_dims == ("pod",)
+    col = Collectives(cube_pod)
+    x = substrate.integer_payload(cube_pod, (5,), seed=9)
+    fn = lambda v: col.all_reduce(v, ("pod", "dp"), algorithm="im")
+    got = substrate.run_per_shard(cube_pod, fn, x)
+    want = oracles.all_reduce(x, 3, (0, 1))
+    np.testing.assert_array_equal(got, want)
+    hlo = substrate.lowered_text(cube_pod, fn, x)
+    assert "reduce-scatter" in hlo or "reduce_scatter" in hlo
+    assert "all-gather" in hlo or "all_gather" in hlo
+
+
+@pytest.mark.parametrize("stage", _stages("all_reduce"))
+def test_pod_crossing_stage_sweep(cube_pod, stage):
+    """Every all_reduce stage agrees on the DCN-crossing "110" group."""
+    names, idx = _sel(cube_pod, "110")
+    col = Collectives(cube_pod)
+    x = substrate.integer_payload(cube_pod, (4,), seed=13)
+    got = substrate.run_per_shard(
+        cube_pod, lambda v: col.all_reduce(v, names, algorithm=stage), x)
+    np.testing.assert_array_equal(got, oracles.all_reduce(x, 3, idx))
+
+
+# ------------------------------------------------------------- rooted four
+@pytest.mark.parametrize("stage", _stages("scatter"))
+@pytest.mark.parametrize("bitmap", ["111", "010"])
+def test_scatter_conformance(cube_2x2x2, bitmap, stage):
+    names, idx = _sel(cube_2x2x2, bitmap)
+    col = Collectives(cube_2x2x2)
+    g = cube_2x2x2.group_size(names)
+    rng = np.random.RandomState(5)
+    host = rng.randn(4 * g, 3).astype(np.float32)
+    dev = col.scatter(host, names, axis=0, algorithm=stage)
+    got = substrate.local_blocks(cube_2x2x2, dev)
+    want = oracles.scatter(host, cube_2x2x2.dim_sizes, idx, axis=0)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("stage", _stages("gather"))
+def test_gather_conformance(cube_2x2x2, stage):
+    names, idx = _sel(cube_2x2x2, "111")
+    col = Collectives(cube_2x2x2)
+    rng = np.random.RandomState(6)
+    host = rng.randn(16, 3).astype(np.float32)
+    dev = col.scatter(host, names, axis=0)
+    back = col.gather(dev, algorithm=stage)
+    np.testing.assert_array_equal(np.asarray(back), host)
+    # the oracle reassembly from per-PE blocks agrees too
+    blocks = substrate.local_blocks(cube_2x2x2, dev)
+    np.testing.assert_array_equal(
+        oracles.gather(blocks, 3, idx, axis=0), host)
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("stage", _stages("reduce"))
+def test_reduce_conformance(cube_2x2x2, op, stage):
+    col = Collectives(cube_2x2x2)
+    host = substrate.integer_payload(cube_2x2x2, (), seed=8).reshape(8, 1)
+    host = np.concatenate([host] * 4, axis=1).astype(np.float32)
+    dev = col.scatter(host, ("a", "b", "c"), axis=0)
+    got = col.reduce(dev, op=op, axis=0, algorithm=stage)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  oracles.reduce(host, axis=0, op=op))
+
+
+@pytest.mark.parametrize("stage", _stages("broadcast"))
+def test_broadcast_conformance(cube_2x2x2, stage):
+    col = Collectives(cube_2x2x2)
+    rng = np.random.RandomState(9)
+    host = rng.randn(6, 2).astype(np.float32)
+    dev = col.broadcast(host, algorithm=stage)
+    got = substrate.local_blocks(cube_2x2x2, dev)
+    want = oracles.broadcast(host, cube_2x2x2.dim_sizes)
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------- coverage accounting
+# Which conformance test carries each primitive's stage sweep. The meta-test
+# below reads the *actual* parametrize marks off these functions, so
+# deleting a test or shrinking its parametrization fails the accounting.
+_CELL_TESTS = {
+    "all_reduce": test_all_reduce_conformance,
+    "reduce_scatter": test_reduce_scatter_conformance,
+    "all_gather": test_all_gather_conformance,
+    "all_to_all": test_all_to_all_conformance,
+    "scatter": test_scatter_conformance,
+    "gather": test_gather_conformance,
+    "reduce": test_reduce_conformance,
+    "broadcast": test_broadcast_conformance,
+}
+
+
+def _swept_stages(test_fn):
+    """Stage values in a test function's parametrize marks."""
+    stages = set()
+    for mark in getattr(test_fn, "pytestmark", []):
+        if mark.name != "parametrize":
+            continue
+        names = [n.strip() for n in mark.args[0].split(",")]
+        if "stage" not in names:
+            continue
+        i = names.index("stage")
+        for val in mark.args[1]:
+            stages.add(val[i] if isinstance(val, tuple) else val)
+    return stages
+
+
+def test_every_table_ii_cell_is_swept():
+    """Meta-test: every (primitive, applicable stage) cell of APPLICABILITY
+    is attached to a collected conformance test's parametrization."""
+    for prim, stages in APPLICABILITY.items():
+        swept = _swept_stages(_CELL_TESTS[prim])
+        assert set(stages) <= swept, (
+            f"unswept stages for {prim}: {set(stages) - swept}")
+        assert "pidcomm" in swept, f"pidcomm alias unswept for {prim}"

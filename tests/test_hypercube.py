@@ -1,53 +1,26 @@
-"""Property tests for the virtual hypercube (paper §IV)."""
+"""Property tests for the virtual hypercube (paper §IV).
+
+``hypothesis`` is an optional dev dependency: with it installed the mapping
+test is a randomized property test; without it the same check runs on a
+fixed set of example decompositions so collection never hard-fails.
+"""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.hypercube import Hypercube
 from repro.core import planner
+from repro.testing.substrate import fake_cube as build
 
 
-class FakeMesh:
-    """Device-free stand-in: Hypercube.build only touches .devices shape and
-    .axis_names for validation; reshape of a numpy arange works the same."""
-
-    def __init__(self, shape, names):
-        self.devices = np.arange(int(np.prod(shape))).reshape(shape)
-        self.axis_names = names
-
-
-def build(phys_shape, phys_names, dims):
-    import repro.core.hypercube as hc
-
-    class _H(Hypercube):
-        pass
-    mesh = FakeMesh(phys_shape, phys_names)
-    # monkeypatch Mesh construction: we only need mapping metadata here
-    orig = hc.Mesh
-    hc.Mesh = lambda devs, names: type(
-        "M", (), {"devices": devs, "axis_names": tuple(names)})()
-    try:
-        return Hypercube.build(mesh, dims)
-    finally:
-        hc.Mesh = orig
-
-
-@st.composite
-def cube_dims(draw):
-    # total 256 devices (one pod), power-of-two dims
-    n = draw(st.integers(1, 5))
-    cuts = sorted(draw(st.lists(st.integers(0, 8), min_size=n - 1,
-                                max_size=n - 1)))
-    bounds = [0] + cuts + [8]
-    parts = [bounds[i + 1] - bounds[i] for i in range(n)]
-    return {f"d{i}": 2 ** k for i, k in enumerate(parts)}
-
-
-@given(cube_dims())
-@settings(max_examples=50, deadline=None)
-def test_mapping_properties(dims):
+def _check_mapping(dims):
     cube = build((16, 16), ("data", "model"), dims)
     assert int(np.prod(cube.dim_sizes)) == 256
     # device order preserved (hierarchy-order mapping)
@@ -58,6 +31,33 @@ def test_mapping_properties(dims):
     if "1" in bitmap:
         sel = cube.dims_from_bitmap(bitmap)
         assert cube.group_size(sel) * cube.num_instances(sel) == 256
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def cube_dims(draw):
+        # total 256 devices (one pod), power-of-two dims
+        n = draw(st.integers(1, 5))
+        cuts = sorted(draw(st.lists(st.integers(0, 8), min_size=n - 1,
+                                    max_size=n - 1)))
+        bounds = [0] + cuts + [8]
+        parts = [bounds[i + 1] - bounds[i] for i in range(n)]
+        return {f"d{i}": 2 ** k for i, k in enumerate(parts)}
+
+    @given(cube_dims())
+    @settings(max_examples=50, deadline=None)
+    def test_mapping_properties(dims):
+        _check_mapping(dims)
+else:
+    @pytest.mark.parametrize("dims", [
+        {"d0": 256},
+        {"d0": 2, "d1": 128},
+        {"d0": 16, "d1": 16},
+        {"d0": 4, "d1": 8, "d2": 8},
+        {"d0": 2, "d1": 2, "d2": 2, "d3": 32},
+    ])
+    def test_mapping_properties(dims):
+        _check_mapping(dims)
 
 
 def test_pod_boundary_rule():

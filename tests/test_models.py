@@ -54,7 +54,7 @@ def test_arch_smoke(arch):
     assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves
                if l.dtype != jnp.int8)
     # forward logits shape
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.models.lm import Model
     from repro.models.params import param_specs, vocab_padded

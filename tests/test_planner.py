@@ -1,0 +1,71 @@
+"""Unit tests for the analytic cost model / algorithm planner.
+
+Device-free: ``substrate.fake_cube`` builds the hypercube over a numpy
+stand-in mesh, so no jax device state is touched -- the planner only reads
+hypercube metadata.
+"""
+import pytest
+
+from repro.core import planner
+from repro.core.collectives import APPLICABILITY
+from repro.testing.substrate import fake_cube
+
+
+@pytest.fixture(scope="module")
+def pod_cube():
+    return fake_cube((2, 16, 16), ("pod", "data", "model"),
+                     {"pod": 2, "dp": 16, "tp": 16})
+
+
+PAYLOAD = 64 * 2 ** 20
+
+
+def test_estimate_monotonicity_pod_crossing_all_reduce(pod_cube):
+    """naive >= direct >= hierarchical in estimated seconds: the replicated
+    intermediate is worst, the flat DCN collective pays full-payload DCN
+    bytes, the §IX-A split pays only the 1/|ICI| shard over DCN."""
+    naive = planner.estimate(pod_cube, "all_reduce", ("pod", "dp"), PAYLOAD,
+                             algorithm="naive")
+    direct = planner.estimate(pod_cube, "all_reduce", ("pod", "dp"), PAYLOAD,
+                              algorithm="direct")
+    hier = planner.estimate(pod_cube, "all_reduce", ("pod", "dp"), PAYLOAD)
+    assert hier.algorithm == "hierarchical"
+    assert direct.algorithm == "direct"
+    assert naive.seconds >= direct.seconds >= hier.seconds
+    # the hierarchical DCN hop carries 1/|ICI| of the payload
+    assert hier.dcn_bytes < direct.dcn_bytes / 8
+    assert hier.dcn_bytes < naive.dcn_bytes / 8
+
+
+def test_dominant_domain_classification(pod_cube):
+    """Pod-crossing direct flows are DCN-bound; intra-pod flows are
+    ICI-bound; the hierarchical split moves an all-reduce from DCN-bound
+    back to ICI-bound (the point of §IX-A)."""
+    direct = planner.estimate(pod_cube, "all_reduce", ("pod", "dp"), PAYLOAD,
+                              algorithm="direct")
+    assert direct.dominant() == "dcn"
+    intra = planner.estimate(pod_cube, "all_reduce", ("dp",), PAYLOAD)
+    assert intra.dominant() == "ici"
+    assert intra.dcn_bytes == 0.0
+    hier = planner.estimate(pod_cube, "all_reduce", ("pod", "dp"), PAYLOAD)
+    assert hier.dominant() == "ici"
+
+
+@pytest.mark.parametrize("primitive", sorted(APPLICABILITY))
+@pytest.mark.parametrize("dims", [("dp",), ("pod", "dp"), ("dp", "tp")])
+def test_plan_returns_applicable_stage(pod_cube, primitive, dims):
+    """plan() must map every choice onto a Table II stage that is actually
+    applicable to the primitive, and never pick a slower candidate than the
+    naive host flow."""
+    est = planner.plan(pod_cube, primitive, dims, PAYLOAD)
+    assert est.stage in APPLICABILITY[primitive]
+    naive = planner.estimate(pod_cube, primitive, dims, PAYLOAD,
+                             algorithm="naive")
+    assert est.seconds <= naive.seconds
+    assert est.ici_bytes >= 0 and est.dcn_bytes >= 0
+
+
+def test_estimate_rejects_unknown_algorithm(pod_cube):
+    with pytest.raises(ValueError, match="unknown planner algorithm"):
+        planner.estimate(pod_cube, "all_reduce", ("dp",), PAYLOAD,
+                         algorithm="warp")

@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # optional dev dep: fixed examples instead
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import get
 from repro.data.pipeline import DataConfig, TokenStream
@@ -68,13 +73,23 @@ def test_straggler_deadline_counter():
     assert tr.slow_steps == 3
 
 
-@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 48]))
-@settings(max_examples=8, deadline=None)
+def _property_decorator():
+    """Randomized under hypothesis; fixed (seed, S) examples without it."""
+    if HAVE_HYPOTHESIS:
+        def deco(f):
+            return settings(max_examples=8, deadline=None)(
+                given(st.integers(0, 2**31 - 1),
+                      st.sampled_from([16, 32, 48]))(f))
+        return deco
+    return pytest.mark.parametrize("seed,S", [(0, 16), (1234, 32), (77, 48)])
+
+
+@_property_decorator()
 def test_property_loss_invariant_to_masked_rows(seed, S):
     """Masked (-1) labels never contribute: appending a fully-masked row
     leaves the loss unchanged (vocab-parallel CE invariant)."""
     cfg, topo, tc, params, opt = _setup()
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.models.lm import Model
     from repro.models.params import param_specs
