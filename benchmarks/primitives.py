@@ -14,10 +14,6 @@ from benchmarks._timing import bench, emit
 
 
 def _setup(shape, names):
-    import jax
-    import jax.numpy as jnp
-    from repro.compat import shard_map
-    from jax.sharding import PartitionSpec as P
     from repro.core.hypercube import Hypercube
     from repro.core.collectives import Collectives
     from repro.launch.mesh import make_mesh
@@ -35,41 +31,57 @@ def _smap_call(cube, f, in_specs, out_specs, *args):
 
 
 def fig14_fig16_primitives(size_kb: int = 512):
-    """8 primitives x every applicable algorithm stage on an 8-device dim."""
+    """8 primitives x every applicable algorithm stage on an 8-device dim.
+
+    Each cell runs through a bound :class:`Communicator` under a
+    :class:`CommTrace`; the ``derived`` column carries the planner's Table II
+    ``stage`` and estimated seconds next to the measurement, plus the
+    measured/estimated ratio (the estimate uses TPU v5e constants, so on the
+    CPU substrate the ratio calibrates the model, it does not validate it).
+    """
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.core.collectives import APPLICABILITY
+    from repro.core.comm import CommTrace
     cube, col = _setup((8,), ("d",))
+    comm = cube.comm("d")
     n = size_kb * 1024 // 4
     g = 8
     x = jnp.ones((g, n), jnp.float32)
 
     cases = {
         "all_reduce": lambda alg: _smap_call(
-            cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+            cube, lambda v: comm.all_reduce(v, algorithm=alg),
             (P("d", None),), P(None, None), x),
         "reduce_scatter": lambda alg: _smap_call(
-            cube, lambda v: col.reduce_scatter(v, "d", axis=1, algorithm=alg),
+            cube, lambda v: comm.reduce_scatter(v, axis=1, algorithm=alg),
             (P("d", None),), P("d", None), x),
         "all_gather": lambda alg: _smap_call(
-            cube, lambda v: col.all_gather(v, "d", axis=0, algorithm=alg),
+            cube, lambda v: comm.all_gather(v, axis=0, algorithm=alg),
             (P("d", None),), P(None, None), x),
         "all_to_all": lambda alg: _smap_call(
-            cube, lambda v: col.all_to_all(v, "d", split_axis=1,
-                                           concat_axis=1, algorithm=alg),
+            cube, lambda v: comm.all_to_all(v, split_axis=1,
+                                            concat_axis=1, algorithm=alg),
             (P("d", None),), P("d", None), x),
     }
     payload = g * n * 4
     for prim, make in cases.items():
         base_us = None
-        for alg in APPLICABILITY[prim] + ("pidcomm",):
-            us = bench(make(alg))
+        for alg in APPLICABILITY[prim] + ("pidcomm", "auto"):
+            with CommTrace() as tr:
+                us = bench(make(alg))   # first call traces -> records event
             if alg == "naive":
                 base_us = us
             gbps = payload / (us * 1e-6) / 1e9
             speedup = base_us / us if base_us else 1.0
-            emit(f"fig14_16/{prim}/{alg}", us,
-                 f"GBps={gbps:.2f};speedup_vs_naive={speedup:.2f}")
+            derived = f"GBps={gbps:.2f};speedup_vs_naive={speedup:.2f}"
+            ev = next((e for e in tr.events if e.primitive == prim), None)
+            if ev is not None and ev.seconds > 0:
+                est_us = ev.seconds * 1e6
+                derived += (f";flow={ev.flow};stage={ev.stage}"
+                            f";est_us={est_us:.1f}"
+                            f";meas_over_est={us / est_us:.1f}")
+            emit(f"fig14_16/{prim}/{alg}", us, derived)
 
     # rooted primitives (host <-> PE path, jit-boundary timing)
     import jax

@@ -1,8 +1,11 @@
-"""Quickstart: the PID-Comm public API in five minutes.
+"""Quickstart: the PID-Comm communicator API in five minutes.
 
-Builds a 2x2x2 virtual hypercube over 8 (fake CPU) devices, runs
-multi-instance collectives over cube slices (paper Fig. 5), compares the
-conventional vs optimized algorithms, and consults the planner.
+Builds a 2x2x2 virtual hypercube over 8 (fake CPU) devices, binds
+communicators to dim selections (``cube.comm``), runs multi-instance
+collectives over cube slices (paper Fig. 5), sweeps the Table II algorithm
+stages, and lets planner-driven ``algorithm="auto"`` dispatch pick the
+§IX-A hierarchical flow on a pod-crossing all-reduce -- with every dispatch
+observed by a :class:`CommTrace`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,50 +19,73 @@ import numpy as np
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import Hypercube, Collectives, estimate
+from repro.core import CommTrace, Hypercube, plan
 from repro.launch.mesh import make_mesh
 
 # 1. define a virtual hypercube over the physical mesh (paper §IV-B):
 #    dims are user-chosen; mapping follows the device hierarchy.
 mesh = make_mesh((2, 4), ("data", "model"))
 cube = Hypercube.build(mesh, {"x": 2, "y": 2, "z": 2})
-col = Collectives(cube)
 print("cube:", cube.describe())
 
-# 2. multi-instance collective over a cube slice: the bitmap "010" selects
-#    the y dimension -> four independent AllReduce instances run at once.
-x = jnp.arange(8.0 * 6).reshape(2, 2, 2, 6)
+# 2. bind a communicator to a dim selection: the bitmap "010" selects the y
+#    dimension -> four independent AllReduce instances run at once.  The
+#    handle caches group size / instance count / ICI-DCN split once.
+ar_y = cube.comm("010")
+print("comm:", ar_y.describe())
 
-ar_y = jax.jit(shard_map(
-    lambda v: col.all_reduce(v, "010"), mesh=cube.mesh,
+x = jnp.arange(8.0 * 6).reshape(2, 2, 2, 6)
+out = jax.jit(shard_map(
+    lambda v: ar_y.all_reduce(v), mesh=cube.mesh,
     in_specs=P("x", "y", "z", None), out_specs=P("x", None, "z", None),
-    check_vma=False))
-print("AllReduce along y (4 instances):", np.asarray(ar_y(x)).shape)
+    check_vma=False))(x)
+print("AllReduce along y (4 instances):", np.asarray(out).shape)
 
 # 3. AlltoAll over the (x, z) plane -- 2 instances of group size 4
 #    (the DLRM embedding exchange of paper Fig. 11).
-aa = jax.jit(shard_map(
-    lambda v: col.all_to_all(v, ("x", "z"), split_axis=3, concat_axis=3),
+aa_xz = cube.comm(("x", "z"))
+out = jax.jit(shard_map(
+    lambda v: aa_xz.all_to_all(v, split_axis=3, concat_axis=3),
     mesh=cube.mesh, in_specs=P("x", "y", "z", None),
-    out_specs=P("x", "y", "z", None), check_vma=False))
-print("AlltoAll over (x,z):", np.asarray(aa(jnp.ones((2, 2, 2, 8)))).shape)
+    out_specs=P("x", "y", "z", None), check_vma=False))(
+        jnp.ones((2, 2, 2, 8)))
+print("AlltoAll over (x,z):", np.asarray(out).shape)
 
-# 4. algorithm stages (paper Fig. 16 ablation): naive -> pr -> im -> cm
-for alg in ("naive", "pr", "im", "pidcomm"):
+# 4. algorithm stages (paper Fig. 16 ablation): naive -> pr -> im -> cm;
+#    "auto" asks the planner, "pidcomm" takes the strongest Table II stage.
+aa_z = cube.comm("001")
+for alg in ("naive", "pr", "im", "pidcomm", "auto"):
     out = jax.jit(shard_map(
-        lambda v: col.all_to_all(v, "001", split_axis=3, concat_axis=3,
-                                 algorithm=alg),
+        lambda v: aa_z.all_to_all(v, split_axis=3, concat_axis=3,
+                                  algorithm=alg),
         mesh=cube.mesh, in_specs=P("x", "y", "z", None),
         out_specs=P("x", "y", "z", None), check_vma=False))(
             jnp.ones((2, 2, 2, 8)))
     print(f"  all_to_all[{alg:8s}] ok, shape {np.asarray(out).shape}")
 
-# 5. the planner estimates per-algorithm cost on the production target
-#    (v5e constants) and picks the schedule -- here for a pod-crossing
-#    gradient AllReduce:
+# 5. plan-driven dispatch across pods: on a pod-crossing gradient AllReduce
+#    the planner picks the hierarchical §IX-A split (ICI reduce-scatter ->
+#    DCN all-reduce of the 1/|ICI| shard -> ICI all-gather), and that is
+#    what algorithm="auto" executes.  CommTrace records each dispatch with
+#    the chosen flow/stage and the estimated ICI/DCN bytes and seconds.
 prod = Hypercube.build(make_mesh((2, 2, 2), ("pod", "data", "model")),
                        {"pod": 2, "dp": 2, "tp": 2})
-est = estimate(prod, "all_reduce", ("pod", "dp"), 64 * 2**20)
+grad_ar = prod.comm(("pod", "dp"))
+est = plan(prod, "all_reduce", ("pod", "dp"), 64 * 2**20)
 print(f"plan: {est.algorithm} via {est.schedule}; "
       f"ICI {est.ici_bytes/2**20:.0f} MiB, DCN {est.dcn_bytes/2**20:.0f} MiB,"
       f" est {est.seconds*1e3:.2f} ms")
+
+with CommTrace() as trace:
+    g = jnp.ones((2, 2, 2, 64), jnp.float32)
+    out = jax.jit(shard_map(
+        lambda v: grad_ar.all_reduce(v), mesh=prod.mesh,
+        in_specs=P("pod", "dp", "tp", None),
+        out_specs=P(None, None, "tp", None), check_vma=False))(g)
+for ev in trace.events:
+    print(f"traced: {ev.primitive}[{ev.bitmap}] -> {ev.flow} "
+          f"(stage {ev.stage}, g={ev.group_size}x{ev.num_instances}inst, "
+          f"ICI {ev.ici_bytes:.0f}B, DCN {ev.dcn_bytes:.0f}B, "
+          f"est {ev.seconds*1e6:.2f}us)")
+assert trace.events and trace.events[0].flow == "hierarchical"
+print("auto dispatch executed the planner's hierarchical pick")

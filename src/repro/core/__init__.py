@@ -1,15 +1,26 @@
-# PID-Comm core: virtual hypercube + eight multi-instance collective
-# primitives + planner + 8-bit DCN compression.
+# PID-Comm core: virtual hypercube + communicator-centric collective API
+# (algorithm registry, plan-driven dispatch, trace instrumentation) +
+# planner + 8-bit DCN compression. `Collectives` is the deprecated per-call
+# shim over the same registry.
 from repro.core.hypercube import Hypercube
+from repro.core.comm import (
+    AlgorithmSpec, CommEvent, CommTrace, Communicator, applicability,
+    get_algorithm, register_algorithm, registered_algorithms, resolve_stage)
 from repro.core.collectives import (
     Collectives, APPLICABILITY, ring_all_reduce, tree_all_reduce)
 from repro.core.planner import CommEstimate, estimate, plan
 from repro.core.compress import (
-    quantize_int8, dequantize_int8, compressed_pod_all_reduce)
+    quantize_int8, dequantize_int8, compressed_pod_all_reduce,
+    compressed_all_reduce)
 
 __all__ = [
-    "Hypercube", "Collectives", "APPLICABILITY",
+    "Hypercube",
+    "AlgorithmSpec", "CommEvent", "CommTrace", "Communicator",
+    "applicability", "get_algorithm", "register_algorithm",
+    "registered_algorithms", "resolve_stage",
+    "Collectives", "APPLICABILITY",
     "ring_all_reduce", "tree_all_reduce",
     "CommEstimate", "estimate", "plan",
     "quantize_int8", "dequantize_int8", "compressed_pod_all_reduce",
+    "compressed_all_reduce",
 ]

@@ -1,338 +1,127 @@
-"""PID-Comm's eight collective primitives for TPU meshes (paper §V).
+"""Deprecated per-call collective surface, now a thin shim over
+:mod:`repro.core.comm` (the communicator-centric API).
 
-Every primitive is *multi-instance*: invoked inside ``shard_map`` over the
-hypercube's logical mesh, a call over a dim subset runs one independent
-instance per cube slice (paper §IV-B3), which is exactly the semantics of a
-``jax.lax`` collective over a tuple of axis names.
+Historically this module *implemented* PID-Comm's eight primitives with the
+paper's Table II algorithm stages (naive -> pr -> im -> cm) as per-call
+``dims``/``algorithm`` arguments.  The bodies now live in the algorithm
+registry of :mod:`repro.core.comm`; :class:`Collectives` survives unchanged
+in signature, delegating every call to a cached, topology-bound
+:class:`~repro.core.comm.Communicator`, so the conformance matrix runs
+bit-identically through either surface.
 
-Each primitive carries a family of algorithms that reproduces the paper's
-ablation stages (Fig. 16, Table II):
+New code should bind a communicator once instead::
 
-  naive   conventional host-mediated flow: materialize a fully-replicated
-          intermediate ("send to host"), modulate it word-by-word with a
-          data-dependent gather / sequential reduction ("host loops"), then
-          slice the local part ("send back"). Maximal external-bus bytes and
-          maximal mediator compute.
-  pr      + PE-assisted reordering: local pre/post reordering makes the
-          mediator's modulation a static slice / one vectorized (vertical)
-          reduction instead of a per-word gather / horizontal loop.
-  im      + in-register modulation: the replicated intermediate is never
-          materialized -- data streams through the collective
-          (psum_scatter/all_gather pairs, ppermute ladders).
-  cm      + cross-domain modulation: the remaining layout conversion is fused
-          into a single native collective (lax.all_to_all / tiled all_gather);
-          for arithmetic primitives CM applies only to 8-bit payloads (paper
-          §V-C), exposed via core.compress.
-  pidcomm alias for the best applicable stage per Table II, plus the
-          hierarchical ICI/DCN split of §IX-A when the group crosses pods.
+    ar = cube.comm("010")          # resolves dims, caches group metadata
+    y = ar.all_reduce(x)           # algorithm="auto": the planner's pick
 
-Applicability (paper Table II) is enforced: requesting an inapplicable stage
-falls back to the strongest applicable one at or below the request.
+``APPLICABILITY`` (paper Table II) is derived from the registry; the
+``pidcomm`` algorithm alias still means "strongest applicable stage, plus
+the hierarchical ICI/DCN split of §IX-A when the group crosses pods".
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro.core import comm as _comm
+from repro.core.comm import resolve_stage  # re-export (legacy import site)
 from repro.core.hypercube import Hypercube
 
 Array = jax.Array
 
-# paper Table II: which optimization stages exist per primitive.
-APPLICABILITY = {
-    "all_to_all": ("naive", "pr", "im", "cm"),
-    "reduce_scatter": ("naive", "pr", "im"),
-    "all_reduce": ("naive", "pr", "im"),
-    "all_gather": ("naive", "pr", "im", "cm"),
-    "scatter": ("naive", "im"),
-    "gather": ("naive", "im"),
-    "reduce": ("naive", "pr", "im"),
-    "broadcast": ("naive",),  # already at peak in the native runtime (Fig 14)
-}
 
-_REDUCERS = {
-    "add": (lax.psum, jnp.sum, jnp.add),
-    "max": (lax.pmax, jnp.max, jnp.maximum),
-    "min": (lax.pmin, jnp.min, jnp.minimum),
-}
-
-# ppermute ladders get HLO-quadratic beyond this group size; fall through to
-# the fused native collective (the schedules coincide there anyway).
-_LADDER_MAX = 32
-
-
-def resolve_stage(primitive: str, algorithm: str) -> str:
-    """Resolve an algorithm request against Table II: ``pidcomm`` means the
-    strongest applicable stage; an inapplicable request falls back to the
-    strongest applicable stage at or below it."""
-    stages = APPLICABILITY[primitive]
-    if algorithm == "pidcomm":
-        return stages[-1]
-    order = ("naive", "pr", "im", "cm")
-    if algorithm not in order:
-        raise ValueError(f"unknown algorithm {algorithm!r}")
-    req = order.index(algorithm)
-    best = stages[0]
-    for s in stages:
-        if order.index(s) <= req:
-            best = s
-    return best
-
-
-_stage = resolve_stage  # internal alias kept for brevity at call sites
-
-
-def _split_axis_to_front(x: Array, axis: int, groups: int) -> Array:
-    """(..., G*b, ...) -> (G, ..., b, ...)."""
-    shape = x.shape
-    if shape[axis] % groups:
-        raise ValueError(f"axis {axis} of {shape} not divisible by {groups}")
-    b = shape[axis] // groups
-    new = shape[:axis] + (groups, b) + shape[axis + 1:]
-    return jnp.moveaxis(x.reshape(new), axis, 0)
-
-
-def _merge_front_blocks(x: Array, axis: int) -> Array:
-    """Inverse of `_split_axis_to_front`: (G, ..., b, ...) -> (..., G*b, ...)."""
-    x = jnp.moveaxis(x, 0, axis)
-    shape = x.shape
-    return x.reshape(shape[:axis] + (shape[axis] * shape[axis + 1],) + shape[axis + 2:])
+def __getattr__(name):
+    # Live views over the registry, so late register_algorithm() calls are
+    # visible through the legacy surface too (PEP 562):
+    #   APPLICABILITY -- paper Table II, derived from the algorithm registry
+    #   _LADDER_MAX   -- the ppermute-ladder threshold; the canonical
+    #                    (writable) knob is ``repro.core.comm._LADDER_MAX``
+    if name == "APPLICABILITY":
+        return _comm.applicability()
+    if name == "_LADDER_MAX":
+        return _comm._LADDER_MAX
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class Collectives:
     """The eight PID-Comm primitives, bound to a :class:`Hypercube`.
 
-    PE<->PE primitives (all_to_all / reduce_scatter / all_gather / all_reduce)
-    are per-shard functions usable only inside ``shard_map`` over
-    ``cube.mesh``. Rooted primitives (scatter / gather / reduce / broadcast)
-    operate at the jit boundary with the host as root (paper §IV-B3).
+    .. deprecated:: use ``cube.comm(dims)`` -- this shim resolves ``dims``
+       per call and delegates to the communicator's registry dispatch.
+
+    PE<->PE primitives (all_to_all / reduce_scatter / all_gather /
+    all_reduce) are per-shard functions usable only inside ``shard_map``
+    over ``cube.mesh``.  Rooted primitives (scatter / gather / reduce /
+    broadcast) operate at the jit boundary with the host as root (§IV-B3).
     """
 
     def __init__(self, cube: Hypercube):
         self.cube = cube
+        self._comms: dict[tuple[str, ...], _comm.Communicator] = {}
 
-    # ----------------------------------------------------------- all_to_all
+    def _comm(self, dims) -> _comm.Communicator:
+        key = self.cube.resolve_dims(dims)
+        got = self._comms.get(key)
+        if got is None:
+            got = self._comms[key] = _comm.Communicator(
+                self.cube, key, default_algorithm="pidcomm")
+        return got
+
+    # ----------------------------------------------------------- PE <-> PE
     def all_to_all(self, x: Array, dims, *, split_axis: int, concat_axis: int,
                    algorithm: str = "pidcomm") -> Array:
-        ax = self.cube.resolve_dims(dims)
-        g = self.cube.group_size(ax)
-        if g == 1:
-            return x
-        stage = _stage("all_to_all", algorithm)
-        if stage == "im" and (g > _LADDER_MAX or len(ax) > 1):
-            stage = "cm"
-        if stage == "cm":
-            # single fused native collective: the layout change happens inside
-            # the transfer (cross-domain modulation).
-            return lax.all_to_all(x, ax, split_axis, concat_axis, tiled=True)
-        if stage == "im":
-            return self._aa_ladder(x, ax, g, split_axis, concat_axis)
-        # naive / pr: replicated intermediate over the group ("host buffer").
-        blocks = _split_axis_to_front(x, split_axis, g)       # (G, ..., b, ..)
-        gathered = compat.all_gather(blocks, ax, axis=0, tiled=False)  # (G, G, ..)
-        me = lax.axis_index(ax)
-        if stage == "pr":
-            # PE-assisted reordering: sources pre-arranged their blocks so the
-            # mediator extracts one column with a single dynamic slice.
-            mine = lax.dynamic_index_in_dim(
-                jnp.swapaxes(gathered, 0, 1), me, axis=0, keepdims=False)
-        else:
-            # naive: per-word modulation -- data-dependent gather over the
-            # flattened buffer (the host rearranging word by word).
-            idx = jnp.arange(g) * g + me
-            flat = gathered.reshape((g * g,) + gathered.shape[2:])
-            mine = jnp.take(flat, idx, axis=0)
-        return _merge_front_blocks(mine, concat_axis)
+        return self._comm(dims).all_to_all(
+            x, split_axis=split_axis, concat_axis=concat_axis,
+            algorithm=algorithm)
 
-    def _aa_ladder(self, x: Array, ax, g: int, split_axis: int,
-                   concat_axis: int) -> Array:
-        """(G-1)-step ppermute ladder: one destination block per step, no
-        replicated intermediate (in-register modulation analogue)."""
-        blocks = _split_axis_to_front(x, split_axis, g)
-        me = lax.axis_index(ax)
-        received = [lax.dynamic_index_in_dim(blocks, me, axis=0)]  # own block
-        for step in range(1, g):
-            # i sends its block destined for (i - step); it lands on (i - step)
-            perm = [(i, (i - step) % g) for i in range(g)]
-            send = lax.dynamic_index_in_dim(blocks, (me - step) % g, axis=0)
-            received.append(lax.ppermute(send, ax, perm))
-        stacked = jnp.concatenate(received, axis=0)  # slot s <- source (me+s)%g
-        idx = (jnp.arange(g) - me) % g               # out[j] = slot (j-me)%g
-        mine = jnp.take(stacked, idx, axis=0)
-        return _merge_front_blocks(mine, concat_axis)
-
-    # ------------------------------------------------------- reduce_scatter
     def reduce_scatter(self, x: Array, dims, *, axis: int, op: str = "add",
                        algorithm: str = "pidcomm") -> Array:
-        ax = self.cube.resolve_dims(dims)
-        g = self.cube.group_size(ax)
-        if g == 1:
-            return x
-        stage = _stage("reduce_scatter", algorithm)
-        if stage == "im":
-            if op == "add":
-                return compat.psum_scatter(x, ax, scatter_dimension=axis)
-            red = _REDUCERS[op][0](x, ax)
-            blocks = _split_axis_to_front(red, axis, g)
-            me = lax.axis_index(ax)
-            return lax.dynamic_index_in_dim(blocks, me, axis=0, keepdims=False)
-        blocks = _split_axis_to_front(x, axis, g)              # (G, ..., b, ..)
-        gathered = compat.all_gather(blocks, ax, axis=0, tiled=False)  # (Gsrc, Gblk, ...)
-        me = lax.axis_index(ax)
-        col = lax.dynamic_index_in_dim(gathered, me, axis=1, keepdims=False)
-        if stage == "pr":
-            # vertical (vectorized) reduction over the stacked source axis --
-            # the paper's one-SIMD-op-per-register argument.
-            return _REDUCERS[op][1](col, axis=0)
-        # naive: horizontal, source-by-source sequential reduction.
-        comb = _REDUCERS[op][2]
-        acc = col[0]
-        for s in range(1, g):
-            acc = comb(acc, col[s])
-        return acc
+        return self._comm(dims).reduce_scatter(
+            x, axis=axis, op=op, algorithm=algorithm)
 
-    # ----------------------------------------------------------- all_gather
     def all_gather(self, x: Array, dims, *, axis: int,
                    algorithm: str = "pidcomm") -> Array:
-        ax = self.cube.resolve_dims(dims)
-        g = self.cube.group_size(ax)
-        if g == 1:
-            return x
-        stage = _stage("all_gather", algorithm)
-        if stage in ("im", "cm"):
-            # direct tiled gather; with CM the consumer reads the gathered
-            # layout in place (no post-reorder op survives fusion).
-            return compat.all_gather(x, ax, axis=axis)
-        if stage == "pr":
-            gathered = compat.all_gather(x, ax, axis=0, tiled=False)
-            return _merge_front_blocks(gathered, axis)
-        # naive: root collects then broadcasts full copies -- emulated by a
-        # masked psum carrying G full-size buffers over the bus.
-        me = lax.axis_index(ax)
-        stacked = jnp.zeros((g,) + x.shape, x.dtype)
-        stacked = lax.dynamic_update_index_in_dim(stacked, x, me, axis=0)
-        full = lax.psum(stacked, ax)
-        return _merge_front_blocks(full, axis)
+        return self._comm(dims).all_gather(x, axis=axis, algorithm=algorithm)
 
-    # ----------------------------------------------------------- all_reduce
     def all_reduce(self, x: Array, dims, *, op: str = "add",
                    algorithm: str = "pidcomm") -> Array:
-        ax = self.cube.resolve_dims(dims)
-        if self.cube.group_size(ax) == 1:
-            return x
-        stage = _stage("all_reduce", algorithm)
-        if stage == "im":
-            fast, slow = self.cube.split_fast_slow(ax)
-            if fast and slow and op == "add":
-                # hierarchical §IX-A: ICI reduce-scatter, DCN all-reduce of
-                # the 1/|ICI| shard, ICI all-gather. DCN bytes drop |ICI|x.
-                gf = self.cube.group_size(fast)
-                flat = x.reshape(-1)
-                pad = (-flat.shape[0]) % gf
-                if pad:
-                    flat = jnp.pad(flat, (0, pad))
-                shard = compat.psum_scatter(flat, fast, scatter_dimension=0)
-                shard = lax.psum(shard, slow)
-                full = compat.all_gather(shard, fast, axis=0)
-                if pad:
-                    full = full[:-pad]
-                return full.reshape(x.shape)
-            return _REDUCERS[op][0](x, ax)
-        g = self.cube.group_size(ax)
-        gathered = compat.all_gather(x, ax, axis=0, tiled=False)
-        if stage == "pr":
-            return _REDUCERS[op][1](gathered, axis=0)
-        comb = _REDUCERS[op][2]
-        acc = gathered[0]
-        for s in range(1, g):
-            acc = comb(acc, gathered[s])
-        return acc
+        return self._comm(dims).all_reduce(x, op=op, algorithm=algorithm)
 
     # --------------------------------------------------- rooted (host) four
-    # The host is always the root (paper §IV-B3). These run at the jit
-    # boundary on global arrays; one buffer per cube slice, like the paper's
-    # per-group host buffers. The ``algorithm`` request is resolved against
-    # Table II for a uniform API, but the device path is stage-invariant:
-    # at the jit boundary the runtime's native host<->device transfer *is*
-    # the in-register path, so naive/pr only differ in the emulated host
-    # flow the paper ablates, not in bytes placed on devices.
     def scatter(self, host_value, dims, *, axis: int,
                 algorithm: str = "pidcomm"):
         """Host -> PEs: partition ``host_value`` along ``axis`` over ``dims``."""
-        _stage("scatter", algorithm)
-        ax = self.cube.resolve_dims(dims)
-        spec = [None] * host_value.ndim
-        spec[axis] = ax if len(ax) > 1 else ax[0]
-        return jax.device_put(host_value, self.cube.sharding(P(*spec)))
+        return self._comm(dims).scatter(host_value, axis=axis,
+                                        algorithm=algorithm)
 
     def broadcast(self, host_value, *, algorithm: str = "pidcomm"):
         """Host -> PEs: replicate to every node."""
-        _stage("broadcast", algorithm)
-        return jax.device_put(host_value, self.cube.sharding(P()))
+        return self._comm(self.cube.dim_names).broadcast(
+            host_value, algorithm=algorithm)
 
     def gather(self, x, *, algorithm: str = "pidcomm"):
         """PEs -> host: materialize the global array in host memory."""
-        _stage("gather", algorithm)
-        return jax.device_get(x)
+        return self._comm(self.cube.dim_names).gather(x, algorithm=algorithm)
 
     def reduce(self, x, *, op: str = "add", axis: int = 0,
                algorithm: str = "pidcomm"):
         """PEs -> host: reduction over the sharded axis, result on host."""
-        _stage("reduce", algorithm)
-        reducer = {"add": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
-        return jax.device_get(reducer(x, axis=axis))
+        return self._comm(self.cube.dim_names).reduce(
+            x, op=op, axis=axis, algorithm=algorithm)
 
 
 # ------------------------------------------------------------------ topology
 # Fig 23(a) comparison topologies over one dim (per-shard, inside shard_map).
+# Now registered first-class all_reduce algorithms ("ring" / "tree"); these
+# wrappers keep the original free-function signatures alive.
 def ring_all_reduce(x: Array, cube: Hypercube, dim: str) -> Array:
-    """Bandwidth-optimal ring: (G-1) reduce-scatter steps + (G-1) all-gather
-    steps of 1/G-size chunks, realized with ppermute."""
-    ax = (dim,)
-    g = cube.size(dim)
-    if g == 1:
+    """Bandwidth-optimal ring all-reduce (see registry algorithm ``ring``)."""
+    if cube.size(dim) == 1:
         return x
-    me = lax.axis_index(ax)
-    orig_len = x.shape[0]
-    pad = (-orig_len) % g
-    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
-    chunks = jnp.stack(jnp.split(xp, g, axis=0), axis=0)   # (G, n/G, ...)
-    fwd = [(i, (i + 1) % g) for i in range(g)]
-    # reduce-scatter phase: after g-1 hops, i holds reduced chunk (i+1)%g.
-    cur = lax.dynamic_index_in_dim(chunks, me, axis=0, keepdims=False)
-    for step in range(g - 1):
-        got = lax.ppermute(cur, ax, fwd)
-        idx = (me - 1 - step) % g
-        cur = got + lax.dynamic_index_in_dim(chunks, idx, axis=0, keepdims=False)
-    red_idx = (me + 1) % g
-    # all-gather phase: h_s = (me + 1 - s) % g after s hops.
-    out = jnp.zeros_like(chunks)
-    out = lax.dynamic_update_index_in_dim(out, cur, red_idx, axis=0)
-    for s in range(1, g):
-        cur = lax.ppermute(cur, ax, fwd)
-        out = lax.dynamic_update_index_in_dim(out, cur, (me + 1 - s) % g, axis=0)
-    full = out.reshape((-1,) + x.shape[1:])
-    return full[:orig_len] if pad else full
+    return cube.comm((dim,)).all_reduce(x, algorithm="ring")
 
 
 def tree_all_reduce(x: Array, cube: Hypercube, dim: str) -> Array:
-    """Recursive-doubling (hypercube-exchange) all-reduce: log2(G) steps of
-    full-payload XOR-partner exchanges -- latency-optimal, bandwidth-
-    suboptimal; stands in for the two-tree comparison of Fig 23(a)."""
-    ax = (dim,)
-    g = cube.size(dim)
-    if g & (g - 1):
-        raise ValueError("tree_all_reduce needs a power-of-two group")
-    acc = x
-    level = 1
-    while level < g:
-        perm = [(i, i ^ level) for i in range(g)]
-        got = lax.ppermute(acc, ax, perm)
-        acc = acc + got
-        level <<= 1
-    return acc
+    """Recursive-doubling all-reduce (see registry algorithm ``tree``)."""
+    if cube.size(dim) == 1:
+        return x
+    return cube.comm((dim,)).all_reduce(x, algorithm="tree")

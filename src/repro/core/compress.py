@@ -8,6 +8,8 @@ conversion from the wire path. Error feedback keeps the optimizer contract.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -45,28 +47,72 @@ def compressed_pod_all_reduce(x: Array, cube: Hypercube, fast_dims, slow_dims,
     Returns (all_reduced, local_quantization_error) -- callers add the error
     into the next step's gradient (error feedback), preserving convergence.
     """
-    fast = cube.resolve_dims(fast_dims)
+    fast = cube.resolve_dims(fast_dims) if fast_dims else ()
     slow = cube.resolve_dims(slow_dims)
-    gf = cube.group_size(fast)
+    gf = cube.group_size(fast) if fast else 1
+    return _compressed_hops(x, fast, slow, gf, block)
 
+
+# ------------------------------------------------- differentiable boundary
+def compressed_all_reduce(x: Array, cube: Hypercube, dims, *,
+                          block: int = 256) -> Array:
+    """§V-C compressed all-reduce under a ``custom_vjp`` boundary.
+
+    Forward: hierarchical all-reduce over ``dims`` with the DCN hop carried
+    as blockwise-absmax int8 (the local quantization error is *dropped* --
+    callers that need error feedback thread :func:`compressed_pod_all_reduce`
+    explicitly).  Backward: the cotangent takes the same compressed
+    all-reduce, i.e. a straight-through quantizer around the psum transpose
+    convention of pre-vma jax -- so the flow is registrable as a first-class
+    collective algorithm inside differentiated model code.
+    """
+    fast, slow = cube.split_fast_slow(dims)
+    if not slow:
+        raise ValueError(f"{dims} never crosses DCN; use a plain all-reduce")
+    gf = cube.group_size(fast) if fast else 1
+    return _compressed_core(x, fast, slow, gf, block)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _compressed_core(x, fast, slow, gf, block):
+    full, _ = _compressed_hops(x, fast, slow, gf, block)
+    return full
+
+
+def _compressed_hops(x, fast, slow, gf, block):
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % (gf * block)
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    shard = lax.psum_scatter(flat, fast, scatter_dimension=0, tiled=True)
-
+    shard = lax.psum_scatter(flat, fast, scatter_dimension=0, tiled=True) \
+        if fast else flat
     q, scale = quantize_int8(shard, block)
     deq_local = dequantize_int8(q, scale, shard.shape, shard.size)
-    err_shard = shard - deq_local  # local error, fed back by the caller
-
+    err_shard = shard - deq_local
     q_all = lax.all_gather(q, slow, axis=0, tiled=False)
     s_all = lax.all_gather(scale, slow, axis=0, tiled=False)
     summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
     summed = summed.reshape(-1)[:shard.size].reshape(shard.shape)
-
-    full = lax.all_gather(summed, fast, axis=0, tiled=True)
-    err = lax.all_gather(err_shard, fast, axis=0, tiled=True)
+    if fast:
+        full = lax.all_gather(summed, fast, axis=0, tiled=True)
+        err = lax.all_gather(err_shard, fast, axis=0, tiled=True)
+    else:
+        full, err = summed, err_shard
     if pad:
         full = full[:-pad]
         err = err[:-pad]
-    return full.reshape(x.shape), err.reshape(x.shape)
+    return full.reshape(x.shape).astype(x.dtype), err.reshape(x.shape)
+
+
+def _compressed_core_fwd(x, fast, slow, gf, block):
+    return _compressed_core(x, fast, slow, gf, block), None
+
+
+def _compressed_core_bwd(fast, slow, gf, block, _, ct):
+    # pre-vma psum convention: the transpose of an all-reduce is an
+    # all-reduce of the cotangent; keep it on the compressed path so the
+    # backward DCN hop is 8-bit too (straight-through quantizer).
+    return (_compressed_core(ct, fast, slow, gf, block),)
+
+
+_compressed_core.defvjp(_compressed_core_fwd, _compressed_core_bwd)

@@ -171,6 +171,20 @@ class Hypercube:
         slow = tuple(d for d in sel if d in self.dcn_dims)
         return fast, slow
 
+    # ---------------------------------------------------------- communicator
+    def comm(self, dims, *, algorithm: str = "auto"):
+        """Bind a :class:`repro.core.comm.Communicator` to a dim selection.
+
+        The communicator resolves ``dims`` once (bitmap / name / sequence),
+        caches the group size, fast/slow split and instance count, and
+        exposes the eight PID-Comm primitives as methods.  ``algorithm`` is
+        the handle's default dispatch mode: ``"auto"`` consults the planner
+        at trace time; stage names and registered first-class algorithms
+        are accepted per call.
+        """
+        from repro.core.comm import Communicator  # deferred: avoid cycle
+        return Communicator(self, dims, default_algorithm=algorithm)
+
     # ------------------------------------------------------------- shardings
     def sharding(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)

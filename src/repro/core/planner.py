@@ -66,32 +66,52 @@ def _group_bytes(primitive: str, payload: float, g: int) -> float:
 
 def _table_ii_stage(primitive: str, algorithm: str) -> str:
     """Map a planner flow onto the Table II stage it corresponds to."""
-    from repro.core.collectives import resolve_stage
+    from repro.core.comm import resolve_stage
     if algorithm == "naive":
         return "naive"
+    if algorithm == "compressed":
+        return "cm"  # §V-C: 8-bit payloads make CM applicable to arithmetic
     # hierarchical / direct both run the runtime's best native flow
     return resolve_stage(primitive, "pidcomm")
 
 
 def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
-             algorithm: str = "pidcomm") -> CommEstimate:
+             algorithm: str = "pidcomm", *, dtype_bytes: int = 4,
+             block: int = 256) -> CommEstimate:
     """Estimate one collective. ``payload_bytes`` is the per-device payload
     (for all_gather: the local shard; for others: the local buffer).
 
     ``algorithm``: ``naive`` (replicated-intermediate host flow),
     ``direct`` (one flat native collective over the whole group, even when
-    it crosses DCN), or ``pidcomm``/``hierarchical`` (the §IX-A split
-    whenever the primitive is an all-reduce spanning both domains; like the
-    runtime, the request *falls back to direct* otherwise -- check the
-    returned ``algorithm`` field when the distinction matters).
+    it crosses DCN), ``compressed`` (the §V-C hierarchical split with a
+    blockwise-int8 DCN hop; ``dtype_bytes``/``block`` size the compression
+    ratio), or ``pidcomm``/``hierarchical`` (the §IX-A split whenever the
+    primitive is an all-reduce spanning both domains; like the runtime, the
+    request *falls back to direct* otherwise -- check the returned
+    ``algorithm`` field when the distinction matters).
     """
-    if algorithm not in ("pidcomm", "naive", "direct", "hierarchical"):
+    if algorithm not in ("pidcomm", "naive", "direct", "hierarchical",
+                         "compressed"):
         raise ValueError(f"unknown planner algorithm {algorithm!r}")
     sel = cube.resolve_dims(dims)
     fast, slow = cube.split_fast_slow(sel)
     gf = int(np.prod([cube.size(d) for d in fast])) if fast else 1
     gs = int(np.prod([cube.size(d) for d in slow])) if slow else 1
     g = gf * gs
+
+    if algorithm == "compressed":
+        # §V-C int8 DCN hop: full-precision ICI reduce-scatter, int8
+        # all-gather of the 1/|ICI| shard (+ one fp32 scale per block)
+        # across pods, ICI all-gather back.
+        ici = 2 * payload_bytes * (gf - 1) / gf if gf > 1 else 0.0
+        shard = payload_bytes / gf
+        dcn = (gs - 1) * (shard / dtype_bytes) * (1.0 + 4.0 / block) \
+            if gs > 1 else 0.0
+        sched = ((f"reduce_scatter[{'x'.join(fast)}]",) if fast else ()) + \
+            ((f"all_gather-int8[{'x'.join(slow)}]",) if slow else ()) + \
+            ((f"all_gather[{'x'.join(fast)}]",) if fast else ())
+        return CommEstimate(primitive, "compressed", sched, ici, dcn,
+                            _bw_time(ici, dcn), "cm")
 
     if algorithm == "naive":
         # replicated-intermediate flow: every device ships its full payload to
@@ -127,15 +147,22 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
                         _table_ii_stage(primitive, "direct"))
 
 
-def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float
-         ) -> CommEstimate:
-    """Pick the fastest flow for this primitive/group among the naive
-    host flow, the flat direct collective, and (when the group spans both
-    domains) the hierarchical split."""
-    cands = [estimate(cube, primitive, dims, payload_bytes, a)
-             for a in ("naive", "direct", "pidcomm")]
-    # int8 compression halves/quarters the DCN hop; the trainer decides
-    # whether the accuracy contract allows it -- we only report the estimate.
+def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,
+         allow_compressed: bool = False) -> CommEstimate:
+    """Pick the fastest flow for this primitive/group among the naive host
+    flow, the flat direct collective, and (when the group spans both
+    domains) the hierarchical split.  This is what ``algorithm="auto"``
+    dispatch on a :class:`repro.core.comm.Communicator` executes.
+
+    ``allow_compressed`` adds the §V-C int8-DCN candidate for pod-crossing
+    additive all-reduces; it is opt-in because the caller (e.g. the trainer)
+    owns the accuracy contract that lossy compression bends.
+    """
+    algs = ["naive", "direct", "pidcomm"]
+    if allow_compressed and primitive == "all_reduce" \
+            and cube.crosses_dcn(dims):
+        algs.append("compressed")
+    cands = [estimate(cube, primitive, dims, payload_bytes, a) for a in algs]
     # Tie-break away from naive: when the byte model can't separate the host
     # flow from the native collective, the runtime still executes the native
     # one, and the reported stage must reflect that.

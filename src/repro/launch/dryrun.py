@@ -22,6 +22,7 @@ from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.core.comm import CommTrace
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import ModelConfig
 from repro.models.lm import Model
@@ -144,6 +145,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
         return rec
 
     t0 = time.monotonic()
+    # Dispatch happens at trace time, so lowering under a CommTrace records
+    # the planned schedule of every communicator call site (one event per
+    # textual site; scanned layers trace once).
+    trace = CommTrace()
     if shape["kind"] == "train":
         topo = build_topology(cfg, mesh, global_batch=shape["batch"])
         tc = TrainConfig()
@@ -151,7 +156,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
         pst = param_structs(cfg, topo)
         ost = opt_structs(cfg, topo, tc)
         bst = input_structs(cfg, topo, shape)
-        lowered = step.lower(pst, ost, bst)
+        with trace:
+            lowered = step.lower(pst, ost, bst)
     elif shape["kind"] == "prefill":
         topo = build_topology(cfg, mesh, global_batch=shape["batch"])
         server = Server(cfg, topo, None)
@@ -164,7 +170,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                        out_specs=(P(topo.dp, topo.tp), _prefill_cache_spec(
                            server, cfg, topo)),
                        check_vma=False)
-        lowered = jax.jit(fn).lower(param_structs(cfg, topo), bst)
+        with trace:
+            lowered = jax.jit(fn).lower(param_structs(cfg, topo), bst)
     else:  # decode
         topo = build_serve_topology(cfg, mesh)
         plan = make_serve_plan(cfg, topo, S_ctx=shape["seq"],
@@ -185,10 +192,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                        in_specs=(specs, cspecs, P(ba), P(ba)),
                        out_specs=(P(ba, topo.tp), cspecs),
                        check_vma=False)
-        lowered = jax.jit(fn, donate_argnums=(1,)).lower(
-            param_structs(cfg, topo), cache_structs(cfg, topo, plan),
-            tok, pos)
+        with trace:
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                param_structs(cfg, topo), cache_structs(cfg, topo, plan),
+                tok, pos)
     rec["cube"] = topo.cube.describe()
+    rec["comm_trace"] = trace.summary()
     rec["lower_s"] = round(time.monotonic() - t0, 1)
 
     t1 = time.monotonic()

@@ -1,12 +1,15 @@
 """Sharded transformer / SSM / MoE blocks (manual SPMD, per-shard code).
 
-Every cross-device transfer in these blocks is a PID-Comm primitive
-(``topo.col.*``) -- AllGather/ReduceScatter implement Megatron-style
-sequence-parallel tensor parallelism, AlltoAll implements expert-parallel MoE
-dispatch, and psum/pmax implement flash-decode LSE combines. The
-``topo.comm_algorithm`` knob swaps every collective between the paper's
-``naive`` (host-mediated analogue) and ``pidcomm`` implementations, enabling
-end-to-end application ablations (paper Fig. 15/16).
+Every cross-device transfer in these blocks goes through a topology-bound
+:class:`repro.core.comm.Communicator` (``topo.comm(axes)``) --
+AllGather/ReduceScatter implement Megatron-style sequence-parallel tensor
+parallelism, AlltoAll implements expert-parallel MoE dispatch, and additive/
+max all-reduces implement flash-decode LSE combines. Dispatch defaults to
+``algorithm="auto"`` (the planner's pick at trace time); the
+``topo.comm_algorithm`` knob swaps every collective onto the paper's
+``naive`` (host-mediated analogue) flows for end-to-end application
+ablations (paper Fig. 15/16), and a :class:`repro.core.comm.CommTrace`
+observes every dispatched transfer.
 
 Training-path activations are sequence-sharded over ``topo.sp`` between
 blocks; decode-path activations are replicated over the model axes with the
@@ -46,8 +49,7 @@ def gather_params(w: dict, specs: dict, topo: Topology) -> dict:
         v = v.astype(COMPUTE_DTYPE)
         if "data" in spec:
             axis = spec.index("data")
-            v = topo.col.all_gather(v, ("data",), axis=axis,
-                                    algorithm=topo.comm_algorithm)
+            v = topo.comm(("data",)).all_gather(v, axis=axis)
         out[k] = v
     return out
 
@@ -102,17 +104,16 @@ def attn_block(cfg: ModelConfig, topo: Topology, w: dict, x_sp: Array, *,
     cross-attention (whisper decoder). Returns new x_sp (and optionally the
     full-seq K/V for prefill caching).
     """
-    col = topo.col
-    alg = topo.comm_algorithm
+    tpc = topo.comm(topo.tp)
     # gather seq over tp (within the cp chunk)
-    h = col.all_gather(x_sp, topo.tp, axis=1, algorithm=alg)  # (B, S_cp, D)
+    h = tpc.all_gather(x_sp, axis=1)                          # (B, S_cp, D)
     hn = rms_norm(h, w[prefix + "ln"], cfg.norm_eps)
     if cross_src is not None:
         kv_src = cross_src
         causal = False
         window = FULL_WINDOW
     elif topo.cp:
-        full = col.all_gather(h, topo.cp, axis=1, algorithm=alg)  # (B, S, D)
+        full = topo.comm(topo.cp).all_gather(h, axis=1)       # (B, S, D)
         kv_src = rms_norm(full, w[prefix + "ln"], cfg.norm_eps)
     else:
         kv_src = hn
@@ -131,7 +132,7 @@ def attn_block(cfg: ModelConfig, topo: Topology, w: dict, x_sp: Array, *,
                           q_offset=q_off)
     o = o.reshape(B, Sq, -1)
     out = o @ w[prefix + "wo"]                     # partial over tp
-    out = col.reduce_scatter(out, topo.tp, axis=1, algorithm=alg)
+    out = tpc.reduce_scatter(out, axis=1)
     y = x_sp + out
     if out_cache:
         # cache layout: sequence-sharded over sp, local kv heads
@@ -160,7 +161,8 @@ def attn_decode(cfg: ModelConfig, topo: Topology, w: dict, x: Array,
     kk, vk = keys
     cache_k, cache_v = c[kk], c[vk]
     int8_cache = (kk + "_s") in c
-    col = topo.col
+    tpc = topo.comm(topo.tp)
+    kvc = topo.comm(kv_axes)
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     B = x.shape[0]
     hn = rms_norm(x[:, None], w[prefix + "ln"], cfg.norm_eps)  # (B,1,D)
@@ -168,11 +170,11 @@ def attn_decode(cfg: ModelConfig, topo: Topology, w: dict, x: Array,
 
     # q: local columns -> gather flat then reshape (supports tp > heads)
     q = hn @ w[prefix + "wq"]                                  # (B,1,cols)
-    q = col.all_gather(q, topo.tp, axis=2).reshape(B, 1, H, hd)
+    q = tpc.all_gather(q, axis=2).reshape(B, 1, H, hd)
     if not cross:
         kvp = hn @ w[prefix + "wkv"]
         if kv_is_sharded(cfg, topo):
-            kvp = col.all_gather(kvp, topo.tp, axis=2)
+            kvp = tpc.all_gather(kvp, axis=2)
         kvp = kvp.reshape(B, 1, KV, 2, hd)
         k_new, v_new = kvp[:, 0, :, 0], kvp[:, 0, :, 1]        # (B,KV,hd)
         if cfg.qk_norm and not prefix:
@@ -238,14 +240,14 @@ def attn_decode(cfg: ModelConfig, topo: Topology, w: dict, x: Array,
         ok &= jnp.where(wnd < 0, True, (dq - dk) < wnd)
     s = jnp.where(ok, s, NEG_INF)
     m = s.max(axis=-1)                                         # (B,H)
-    m_all = lax.pmax(m, kv_axes)
+    m_all = kvc.all_reduce(m, op="max")
     p = jnp.exp(s - m_all[..., None])
-    l = lax.psum(p.sum(-1), kv_axes)
+    l = kvc.all_reduce(p.sum(-1))
     vf = cache_v.astype(jnp.float32)
     if int8_cache:
         vf = vf * c[vk + "_s"][..., None]
     o = _decode_out(p, vf, G)                                  # (B,H,hd)
-    o = lax.psum(o, kv_axes) / jnp.maximum(l, 1e-30)[..., None]
+    o = kvc.all_reduce(o) / jnp.maximum(l, 1e-30)[..., None]
 
     # out projection: my slice of the flattened head dim (wo row shard)
     me = _tp_rank(topo)
@@ -253,7 +255,7 @@ def attn_decode(cfg: ModelConfig, topo: Topology, w: dict, x: Array,
     o_flat = o.reshape(B, H * hd).astype(COMPUTE_DTYPE)
     o_loc = lax.dynamic_slice_in_dim(o_flat, me * rows, rows, axis=1)
     out = o_loc @ w[prefix + "wo"]
-    out = lax.psum(out, topo.tp)
+    out = tpc.all_reduce(out)
     c = dict(c)
     c[kk], c[vk] = cache_k, cache_v
     return x + out.astype(x.dtype), c
@@ -283,13 +285,12 @@ def _decode_out(p, vf, G):
 
 # --------------------------------------------------------------------- FFNs
 def dense_ffn(cfg, topo, w, x_sp, keys=("fln", "wg", "wu", "wd")):
-    col = topo.col
-    alg = topo.comm_algorithm
+    tpc = topo.comm(topo.tp)
     ln, wg, wu, wd = (w[k] for k in keys)
-    h = col.all_gather(x_sp, topo.tp, axis=1, algorithm=alg)
+    h = tpc.all_gather(x_sp, axis=1)
     hn = rms_norm(h, ln, cfg.norm_eps)
     out = (jax.nn.silu(hn @ wg) * (hn @ wu)) @ wd
-    out = col.reduce_scatter(out, topo.tp, axis=1, algorithm=alg)
+    out = tpc.reduce_scatter(out, axis=1)
     return x_sp + out
 
 
@@ -297,7 +298,7 @@ def dense_ffn_decode(cfg, topo, w, x, keys=("fln", "wg", "wu", "wd")):
     ln, wg, wu, wd = (w[k] for k in keys)
     hn = rms_norm(x, ln, cfg.norm_eps)
     out = (jax.nn.silu(hn @ wg) * (hn @ wu)) @ wd
-    return x + lax.psum(out, topo.tp).astype(x.dtype)
+    return x + topo.comm(topo.tp).all_reduce(out).astype(x.dtype)
 
 
 def _route(cfg, hn2d, router):
@@ -314,8 +315,6 @@ def moe_ffn(cfg, topo, w, x_sp):
     primitive, used exactly like DLRM embedding exchange, Fig. 11).
 
     Returns (new_x_sp, aux_loss)."""
-    col = topo.col
-    alg = topo.comm_algorithm
     ep_size = topo.size(topo.ep)
     etp_size = topo.size(topo.etp)
     Ep = cfg.n_experts_padded
@@ -323,7 +322,7 @@ def moe_ffn(cfg, topo, w, x_sp):
 
     x_e = x_sp
     if etp_size > 1:
-        x_e = col.all_gather(x_sp, topo.etp, axis=1, algorithm=alg)
+        x_e = topo.comm(topo.etp).all_gather(x_sp, axis=1)
     B, S_e, D = x_e.shape
     hn = rms_norm(x_e, w["fln"], cfg.norm_eps)
     T = B * S_e
@@ -369,15 +368,14 @@ def moe_ffn(cfg, topo, w, x_sp):
             jnp.where(keep[:, None], h2[tok], 0))
 
     # AlltoAll over the expert dimension of the hypercube
-    recv = col.all_to_all(disp, topo.ep, split_axis=0, concat_axis=1,
-                          algorithm=alg)                       # (E_loc, ep*C, D)
+    epc = topo.comm(topo.ep)
+    recv = epc.all_to_all(disp, split_axis=0, concat_axis=1)   # (E_loc, ep*C, D)
     hh = jnp.einsum("ecd,edf->ecf", recv, w["we_g"])
     hh = jax.nn.silu(hh) * jnp.einsum("ecd,edf->ecf", recv, w["we_u"])
     oo = jnp.einsum("ecf,efd->ecd", hh, w["we_d"])
     if etp_size > 1:
-        oo = lax.psum(oo, topo.etp)
-    back = col.all_to_all(oo, topo.ep, split_axis=1, concat_axis=0,
-                          algorithm=alg)                       # (Ep, C, D)
+        oo = topo.comm(topo.etp).all_reduce(oo)
+    back = epc.all_to_all(oo, split_axis=1, concat_axis=0)     # (Ep, C, D)
 
     vals = back[flat_e, jnp.clip(pos_in_e, 0, C - 1)]          # (T*k, D)
     vals = jnp.where(keep[:, None], vals, 0) * topv.reshape(-1)[:, None]
@@ -395,7 +393,7 @@ def moe_ffn(cfg, topo, w, x_sp):
 
 def moe_ffn_decode(cfg, topo, w, x):
     """Decode-path MoE: tokens replicated over model axes; dispatch over ep."""
-    col = topo.col
+    epc = topo.comm(topo.ep)
     ep_size = topo.size(topo.ep)
     etp_size = topo.size(topo.etp)
     Ep = cfg.n_experts_padded
@@ -411,13 +409,13 @@ def moe_ffn_decode(cfg, topo, w, x):
     disp = jnp.zeros((Ep, C, D), hn.dtype).at[
         flat_e, jnp.clip(pos_in_e, 0, C - 1)].add(
         jnp.where(keep[:, None], hn[tok], 0))
-    recv = col.all_to_all(disp, topo.ep, split_axis=0, concat_axis=1)
+    recv = epc.all_to_all(disp, split_axis=0, concat_axis=1)
     hh = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w["we_g"]))
     hh = hh * jnp.einsum("ecd,edf->ecf", recv, w["we_u"])
     oo = jnp.einsum("ecf,efd->ecd", hh, w["we_d"])
     if etp_size > 1:
-        oo = lax.psum(oo, topo.etp)
-    back = col.all_to_all(oo, topo.ep, split_axis=1, concat_axis=0)
+        oo = topo.comm(topo.etp).all_reduce(oo)
+    back = epc.all_to_all(oo, split_axis=1, concat_axis=0)
     vals = back[flat_e, jnp.clip(pos_in_e, 0, C - 1)]
     vals = jnp.where(keep[:, None], vals, 0) * topv.reshape(-1)[:, None]
     out = jnp.zeros((B, D), vals.dtype).at[tok].add(vals)
@@ -427,16 +425,15 @@ def moe_ffn_decode(cfg, topo, w, x):
 
 
 def rwkv_channel_mix(cfg, topo, w, x_sp, out_cache: bool = False):
-    col = topo.col
-    alg = topo.comm_algorithm
-    h = col.all_gather(x_sp, topo.tp, axis=1, algorithm=alg)   # (B, S, D)
+    tpc = topo.comm(topo.tp)
+    h = tpc.all_gather(x_sp, axis=1)                           # (B, S, D)
     hn = rms_norm(h, w["fln"], cfg.norm_eps)
     prev = jnp.pad(hn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
     xk = hn + w["cm_mu"][0] * (prev - hn)
     xr = hn + w["cm_mu"][1] * (prev - hn)
     kk = jnp.square(jax.nn.relu(xk @ w["cm_k"]))
     out = kk @ w["cm_v"]                                       # partial (tp)
-    out = col.reduce_scatter(out, topo.tp, axis=1, algorithm=alg)
+    out = tpc.reduce_scatter(out, axis=1)
     gate = jax.nn.sigmoid(xr @ w["cm_r"])                      # (B,S,D) repl.
     me = _tp_rank(topo)
     S_sp = x_sp.shape[1]
@@ -452,7 +449,7 @@ def rwkv_channel_mix_decode(cfg, topo, w, x, prev):
     xk = hn + w["cm_mu"][0] * (prev - hn)
     xr = hn + w["cm_mu"][1] * (prev - hn)
     kk = jnp.square(jax.nn.relu(xk @ w["cm_k"]))
-    out = lax.psum(kk @ w["cm_v"], topo.tp)
+    out = topo.comm(topo.tp).all_reduce(kk @ w["cm_v"])
     gate = jax.nn.sigmoid(xr @ w["cm_r"])
     return x + (out * gate).astype(x.dtype), hn
 
@@ -460,9 +457,8 @@ def rwkv_channel_mix_decode(cfg, topo, w, x, prev):
 # ------------------------------------------------------------------ mixers
 def rwkv_mix(cfg, topo, w, x_sp, out_cache: bool = False):
     """RWKV6 time-mix. Training path: x_sp (B, S_sp, D)."""
-    col = topo.col
-    alg = topo.comm_algorithm
-    h = col.all_gather(x_sp, topo.sp, axis=1, algorithm=alg)   # (B, S, D)
+    spc = topo.comm(topo.sp)
+    h = spc.all_gather(x_sp, axis=1)                           # (B, S, D)
     hn = rms_norm(h, w["ln"], cfg.norm_eps)
     hprev = jnp.pad(hn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
     mu = w["mu"]
@@ -480,7 +476,7 @@ def rwkv_mix(cfg, topo, w, x_sp, out_cache: bool = False):
     u = w["bonus_u"].reshape(Hl, hd)
     o, state = ssm.rwkv6_chunked(r, k, v, logw, u)
     out = (o.reshape(B, S, Dl) * g) @ w["wo"]                  # partial (tp)
-    out = col.reduce_scatter(out, topo.sp, axis=1, algorithm=alg)
+    out = spc.reduce_scatter(out, axis=1)
     y = x_sp + out
     if out_cache:
         return y, (state, hn[:, -1])
@@ -505,14 +501,13 @@ def rwkv_mix_decode(cfg, topo, w, x, state, prev):
     u = w["bonus_u"].reshape(Hl, hd)
     o, state = ssm.rwkv6_step(r, k, v, logw, u, state)
     out = (o.reshape(B, Dl) * g) @ w["wo"]
-    out = lax.psum(out, topo.tp)
+    out = topo.comm(topo.tp).all_reduce(out)
     return x + out.astype(x.dtype), state, hn
 
 
 def mamba_mix(cfg, topo, w, x_sp, out_cache: bool = False):
-    col = topo.col
-    alg = topo.comm_algorithm
-    h = col.all_gather(x_sp, topo.sp, axis=1, algorithm=alg)   # (B, S, D)
+    spc = topo.comm(topo.sp)
+    h = spc.all_gather(x_sp, axis=1)                           # (B, S, D)
     hn = rms_norm(h, w["ln"], cfg.norm_eps)
     B, S = hn.shape[:2]
     # in_proj columns laid out (din, 2): (x, z) stay paired per channel so
@@ -526,13 +521,13 @@ def mamba_mix(cfg, topo, w, x_sp, out_cache: bool = False):
     R = dt_rank(cfg)
     n = cfg.d_state
     dbc = xc @ w["x_proj"]                                     # partial (tp)
-    dbc = lax.psum(dbc, topo.tp)                               # (B,S,R+2n)
+    dbc = topo.comm(topo.tp).all_reduce(dbc)                   # (B,S,R+2n)
     dt = jax.nn.softplus(dbc[..., :R] @ w["dt_proj"] + w["dt_bias"])
     Bm, Cm = dbc[..., R:R + n], dbc[..., R + n:]
     A = -jnp.exp(w["a_log"])
     y, state = ssm.mamba_scan_chunked(xc, dt, A, Bm, Cm)
     out = (y * jax.nn.silu(z) + xc * w["d_skip"]) @ w["out_proj"]
-    out = col.reduce_scatter(out, topo.sp, axis=1, algorithm=alg)
+    out = spc.reduce_scatter(out, axis=1)
     y_sp = x_sp + out
     if out_cache:
         return y_sp, (state, conv_tail)
@@ -551,11 +546,12 @@ def mamba_mix_decode(cfg, topo, w, x, ssm_state, conv_tail):
     z = z[:, 0]
     R = dt_rank(cfg)
     n = cfg.d_state
-    dbc = lax.psum(xc @ w["x_proj"], topo.tp)
+    tpc = topo.comm(topo.tp)
+    dbc = tpc.all_reduce(xc @ w["x_proj"])
     dt = jax.nn.softplus(dbc[..., :R] @ w["dt_proj"] + w["dt_bias"])
     Bm, Cm = dbc[..., R:R + n], dbc[..., R + n:]
     A = -jnp.exp(w["a_log"])
     y, ssm_state = ssm.mamba_step(xc, dt, A, Bm, Cm, ssm_state)
     out = (y * jax.nn.silu(z) + xc * w["d_skip"]) @ w["out_proj"]
-    out = lax.psum(out, topo.tp)
+    out = tpc.all_reduce(out)
     return x + out.astype(x.dtype), ssm_state, conv_tail

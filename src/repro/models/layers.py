@@ -237,12 +237,14 @@ def _chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
-def finish_partial_attention(acc, m, l, *, psum_axes, B, Sq, H, hd, dtype):
-    """LSE-combine ``partial=True`` results across ``psum_axes`` shards."""
-    m_max = lax.pmax(m, psum_axes)
+def finish_partial_attention(acc, m, l, *, comm, B, Sq, H, hd, dtype):
+    """LSE-combine ``partial=True`` results across the shards of ``comm``
+    (a :class:`repro.core.comm.Communicator` bound to the flash-decode
+    axes)."""
+    m_max = comm.all_reduce(m, op="max")
     w = jnp.exp(m - m_max)
-    acc = lax.psum(acc * w[..., None], psum_axes)
-    l = lax.psum(l * w, psum_axes)
+    acc = comm.all_reduce(acc * w[..., None])
+    l = comm.all_reduce(l * w)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
     return out.astype(dtype)

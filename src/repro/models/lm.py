@@ -64,9 +64,8 @@ class Model:
         emb = params["embed"].astype(COMPUTE_DTYPE)
         spec = tuple(self.specs["embed"])
         if "data" in spec:
-            emb = self.topo.col.all_gather(
-                emb, ("data",), axis=spec.index("data"),
-                algorithm=self.topo.comm_algorithm)
+            emb = self.topo.comm(("data",)).all_gather(
+                emb, axis=spec.index("data"))
         return emb
 
     def _embed_tokens(self, emb_l, tokens):
@@ -85,8 +84,7 @@ class Model:
             S_cp = x_partial.shape[1] // topo.size(topo.cp)
             me = lax.axis_index(topo.cp)
             x_partial = lax.dynamic_slice_in_dim(x_partial, me * S_cp, S_cp, 1)
-        return topo.col.reduce_scatter(x_partial, topo.tp, axis=1,
-                                       algorithm=topo.comm_algorithm)
+        return topo.comm(topo.tp).reduce_scatter(x_partial, axis=1)
 
     def _slice_sp(self, x_full):
         """Replicated full-seq -> my sp chunk (no reduction)."""
@@ -197,8 +195,7 @@ class Model:
 
         body = jax.checkpoint(body)
         x_sp, _ = layers.pscan(body, x_sp, params["enc_units"]["p0"])
-        full = topo.col.all_gather(x_sp, topo.sp, axis=1,
-                                   algorithm=topo.comm_algorithm)
+        full = topo.comm(topo.sp).all_gather(x_sp, axis=1)
         fn = blocks.gather_params(
             {"n": params["enc_final_norm"]},
             {"n": self.specs["enc_final_norm"]}, topo)["n"]
@@ -222,8 +219,7 @@ class Model:
             enc_out = self.encode(params, batch["frames"])
         x_sp = self.embed_input(params, batch)
         x_sp, aux = self.trunk(params, x_sp, enc_out=enc_out)
-        full = topo.col.all_gather(x_sp, topo.sp, axis=1,
-                                   algorithm=topo.comm_algorithm)
+        full = topo.comm(topo.sp).all_gather(x_sp, axis=1)
         fn = blocks.gather_params(
             {"n": params["final_norm"]}, {"n": self.specs["final_norm"]},
             topo)["n"]
@@ -247,7 +243,8 @@ class Model:
             hc = lax.dynamic_slice_in_dim(hn, i * Ck, Ck, axis=1)
             lc = lax.dynamic_slice_in_dim(labels, i * Ck, Ck, axis=1)
             logits = (hc @ head).astype(jnp.float32)           # (B,Ck,Vl)
-            m = lax.pmax(lax.stop_gradient(logits.max(-1)), topo.tp)
+            m = topo.comm(topo.tp).all_reduce(
+                lax.stop_gradient(logits.max(-1)), op="max")
             se = compat.replicated_psum(
                 jnp.exp(logits - m[..., None]).sum(-1), topo.tp)
             lse = jnp.log(se) + m
@@ -282,7 +279,7 @@ class Model:
             enc_out = self.encode(params, batch["frames"])
         x_sp = self.embed_input(params, batch)
         x_sp, _ = self.trunk(params, x_sp, enc_out=enc_out, remat=False)
-        full = topo.col.all_gather(x_sp, topo.sp, axis=1)
+        full = topo.comm(topo.sp).all_gather(x_sp, axis=1)
         fn = blocks.gather_params(
             {"n": params["final_norm"]}, {"n": self.specs["final_norm"]},
             topo)["n"]

@@ -16,7 +16,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.models import blocks
@@ -153,7 +152,8 @@ class Server:
         cfg, topo, plan = self.cfg, self.topo, self.plan
         m = self.model
         emb_l = m._gather_embed(params)
-        x = lax.psum(m._embed_tokens(emb_l, tokens[:, None]), topo.tp)[:, 0]
+        x = topo.comm(topo.tp).all_reduce(
+            m._embed_tokens(emb_l, tokens[:, None]))[:, 0]
 
         def unit_fn(x, slices):
             xs, cin = slices
@@ -256,7 +256,7 @@ class Server:
         if m.window_xs:
             xs["windows"] = m.window_xs
         x_sp, cache = pscan(unit_fn, x_sp, xs)
-        full = topo.col.all_gather(x_sp, topo.sp, axis=1)
+        full = topo.comm(topo.sp).all_gather(x_sp, axis=1)
         fn = blocks.gather_params(
             {"n": params["final_norm"]}, {"n": m.specs["final_norm"]},
             topo)["n"]

@@ -9,8 +9,10 @@ hypercube --
   prefill with batch < data capacity: (pod) x data x cp x tp
             (cp = context/sequence parallelism over query chunks)
 
-All model collectives go through :class:`repro.core.Collectives` bound to
-this cube.
+All model collectives go through topology-bound
+:class:`repro.core.comm.Communicator` handles (``topo.comm(axes)``), so
+every transfer is planned, dispatched through the algorithm registry, and
+observable via :class:`repro.core.comm.CommTrace`.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.collectives import Collectives
+from repro.core.comm import Communicator
 from repro.core.hypercube import Hypercube
 from repro.models.config import ModelConfig
 
@@ -26,14 +29,29 @@ from repro.models.config import ModelConfig
 @dataclasses.dataclass(frozen=True)
 class Topology:
     cube: Hypercube
-    col: Collectives
+    col: Collectives         # deprecated per-call shim (kept for back-compat)
     dp: tuple[str, ...]      # batch axes, e.g. ("pod", "data")
     fsdp: tuple[str, ...]    # param-shard axes, e.g. ("data",)
     tp: tuple[str, ...]      # attention/FFN tensor-parallel axes
     cp: tuple[str, ...]      # context-parallel axes (may be empty)
     ep: tuple[str, ...]      # expert-parallel axes (may be empty)
     etp: tuple[str, ...]     # per-expert TP axes (may be empty)
-    comm_algorithm: str = "pidcomm"   # every collective's algorithm knob
+    # Default dispatch mode of every bound communicator: "auto" = the
+    # planner's pick at trace time; a Table II stage name ("naive", ...)
+    # turns the knob for end-to-end application ablations (Fig. 15/16).
+    comm_algorithm: str = "auto"
+    _comms: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
+
+    def comm(self, dims) -> Communicator:
+        """The cached communicator bound to ``dims`` (axis names, a bitmap,
+        or a single name), defaulting to this topology's algorithm knob."""
+        key = (self.comm_algorithm, self.cube.resolve_dims(dims))
+        got = self._comms.get(key)
+        if got is None:
+            got = self._comms[key] = self.cube.comm(
+                key[1], algorithm=self.comm_algorithm)
+        return got
 
     def size(self, axes: tuple[str, ...]) -> int:
         return int(np.prod([self.cube.size(a) for a in axes])) if axes else 1

@@ -3,9 +3,11 @@
 The step is one shard_map over the architecture's hypercube:
 
   fwd/bwd (FSDP AllGather / ReduceScatter + TP AllGather/ReduceScatter +
-  EP AlltoAll, all pidcomm) -> tagged gradient psums -> cross-pod gradient
-  all-reduce over the DCN axis (hierarchical §IX-A; optionally int8 with
-  error feedback, §V-C) -> global-norm clip -> AdamW(8-bit moments).
+  EP AlltoAll, all dispatched through topology-bound communicators with
+  ``algorithm="auto"``) -> tagged gradient all-reduces -> cross-pod gradient
+  all-reduce over the DCN axis (hierarchical §IX-A via the planner's pick;
+  optionally int8 §V-C when ``compress_pod_grads`` is set) -> global-norm
+  clip -> AdamW(8-bit moments).
 
 The loop driver adds microbatch accumulation, per-step deadlines (straggler
 mitigation) and checkpoint/restart.
@@ -20,7 +22,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -39,9 +40,12 @@ class TrainConfig:
     total_steps: int = 10000
     clip_norm: float = 1.0
     adamw: adamw.AdamWConfig = adamw.AdamWConfig()
-    # reserved: int8 DCN gradient hop (paper §V-C). The compressed
-    # collective is implemented + multi-device-tested (core/compress.py);
-    # wiring it under vma-autodiff needs a custom_vjp boundary (future work).
+    # int8 DCN gradient hop (paper §V-C): pod-crossing replicated-gradient
+    # all-reduces dispatch the registry's "compressed" algorithm (a
+    # custom_vjp-bounded hierarchical flow whose DCN hop is blockwise-absmax
+    # int8, core/compress.py). Effective on the explicit pre-vma gradient
+    # sync path; on vma-tracking jax the autodiff-inserted psums already ran
+    # and the flag is a no-op (make_train_step warns).
     compress_pod_grads: bool = False
     step_deadline_s: float = 0.0       # 0 = no straggler deadline
 
@@ -66,13 +70,22 @@ def _replication_factor(spec, topo: Topology) -> int:
     return repl
 
 
-def sync_replicated_grads(grads, specs, cube):
-    """Insert the gradient psums that vma-aware autodiff (check_vma=True on
-    jax 0.5+) derives automatically: each leaf's per-shard gradient must be
-    summed over every cube axis its spec does not shard (its replication
-    axes), because sharded compute feeding a replicated parameter leaves one
-    partial contribution per shard. No-op when the installed jax tracks
-    varying axes in avals (compat.HAS_VMA)."""
+def sync_replicated_grads(grads, specs, cube, *, compress_pod: bool = False):
+    """Insert the gradient all-reduces that vma-aware autodiff
+    (check_vma=True on jax 0.5+) derives automatically: each leaf's
+    per-shard gradient must be summed over every cube axis its spec does
+    not shard (its replication axes), because sharded compute feeding a
+    replicated parameter leaves one partial contribution per shard.
+
+    Each reduction dispatches through ``cube.comm(missing)`` with
+    ``algorithm="auto"``, so a pod-crossing gradient sum executes the
+    planner's pick -- the hierarchical §IX-A split -- and is recorded by any
+    active CommTrace.  With ``compress_pod`` the DCN-crossing reductions
+    take the registry's "compressed" int8 flow (§V-C) instead.
+
+    No-op when the installed jax tracks varying axes in avals
+    (compat.HAS_VMA): there the psums were already inserted by autodiff.
+    """
     from repro import compat
     if compat.HAS_VMA:
         return grads
@@ -83,7 +96,14 @@ def sync_replicated_grads(grads, specs, cube):
         present = _spec_axes(s)
         missing = tuple(d for d, n in zip(cube.dim_names, cube.dim_sizes)
                         if d not in present and n > 1)
-        out.append(lax.psum(g, missing) if missing else g)
+        if not missing:
+            out.append(g)
+            continue
+        comm = cube.comm(missing)
+        if compress_pod and comm.crosses_dcn:
+            out.append(comm.all_reduce(g, algorithm="compressed"))
+        else:
+            out.append(comm.all_reduce(g))
     return jax.tree.unflatten(tdef, out)
 
 
@@ -93,6 +113,13 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
     model = Model(cfg, topo)
     specs = param_specs(cfg, topo)
     lr_fn = adamw.cosine_schedule(tc.lr, tc.warmup, tc.total_steps)
+    from repro import compat
+    if tc.compress_pod_grads and compat.HAS_VMA:
+        import warnings
+        warnings.warn(
+            "compress_pod_grads is a no-op on vma-tracking jax: gradient "
+            "reductions are inserted by autodiff before the trainer can "
+            "route them through the compressed collective")
 
     def step_shard(params, opt_state, batch):
         # Gradient reductions are inserted by shard_map's vma-aware autodiff
@@ -103,8 +130,10 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
         # the sharding structure.
         (loss, metrics), grads = jax.value_and_grad(
             model.loss_shard, has_aux=True)(params, batch)
-        # pre-vma jax: restore the replicated-leaf psums by hand
-        grads = sync_replicated_grads(grads, specs, topo.cube)
+        # pre-vma jax: restore the replicated-leaf all-reduces by hand,
+        # planner-dispatched (hierarchical across pods; int8 when enabled)
+        grads = sync_replicated_grads(grads, specs, topo.cube,
+                                      compress_pod=tc.compress_pod_grads)
 
         # global-norm clip (replication-aware: local sum-of-squares divided
         # by each leaf's replication degree, then summed over the full cube)
@@ -115,7 +144,7 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
             sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32))
                               ) / _replication_factor(s, topo)
         sq = pvary_axes(sq, topo.cube.dim_names)
-        gnorm = jnp.sqrt(lax.psum(sq, topo.cube.dim_names))
+        gnorm = jnp.sqrt(topo.comm(topo.cube.dim_names).all_reduce(sq))
         scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-12))
         grads = jax.tree.map(lambda g: g * scale, grads)
 

@@ -47,11 +47,18 @@ CUBE_SPECS: Mapping[str, tuple[tuple[int, ...], tuple[str, ...], dict]] = {
     "2x2x2": ((2, 2, 2), ("a", "b", "c"), {"a": 2, "b": 2, "c": 2}),
     "pod2x2x2": ((2, 2, 2), ("pod", "data", "model"),
                  {"pod": 2, "dp": 2, "tp": 2}),
+    # 16-device shapes (subprocess sweeps only: the in-process suite boots
+    # 8 virtual devices; tests/multidev16_check.py boots its own 16).
+    "4d16": ((2, 2, 2, 2), ("w", "x", "y", "z"),
+             {"w": 2, "x": 2, "y": 2, "z": 2}),
+    "ring16": ((16,), ("d",), {"d": 16}),
+    "pod2x4x2": ((2, 4, 2), ("pod", "data", "model"),
+                 {"pod": 2, "dp": 4, "tp": 2}),
 }
 
 
 def build_cube(name: str):
-    """Build one of the named conformance hypercubes (8 virtual devices)."""
+    """Build one of the named conformance hypercubes."""
     from repro.compat import make_mesh
     from repro.core.hypercube import Hypercube
     shape, axes, dims = CUBE_SPECS[name]

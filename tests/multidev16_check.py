@@ -1,0 +1,109 @@
+"""16-virtual-device conformance sweep: 4-D hypercubes and deeper
+`1100`-style bitmap selections, through the communicator API.
+
+Run in a subprocess (so the 16-device count never leaks into the main
+pytest process, which boots 8):
+
+    python tests/multidev16_check.py
+
+Prints ``ALL-OK`` on success; raises on any mismatch.  The sweep covers:
+  * every Table II stage (+ pidcomm + auto) of the four PE<->PE primitives
+    on the 2x2x2x2 cube, over contiguous ("1100"/"0011"), interleaved
+    ("1010"/"0101"), middle ("0110") and full ("1111") bitmap selections --
+    multi-instance groups of size 2/4/16 with up to 8 instances;
+  * the 16-wide flat ring (single-dim, stresses the _LADDER_MAX ladder);
+  * a pod-crossing 2x4x2 cube: planner-driven "auto" must execute the
+    hierarchical §IX-A schedule at 16 devices (HLO assertion included).
+"""
+import os
+import re
+
+# Replace (not just prepend) any inherited device-count flag: under pytest
+# the parent process exports =8, and XLA honors the last occurrence.
+_flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=16 " + _flags).strip()
+
+import numpy as np
+
+from repro.core.collectives import APPLICABILITY
+from repro.core.comm import CommTrace
+from repro.testing import oracles, substrate
+
+
+def check(name, got, want):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                  err_msg=name)
+    print(f"ok: {name}")
+
+
+def sweep_cube(cube, bitmaps):
+    nd = len(cube.dim_sizes)
+    for bm in bitmaps:
+        names = cube.dims_from_bitmap(bm)
+        idx = tuple(cube.dim_names.index(d) for d in names)
+        comm = cube.comm(bm)
+        g = comm.group_size
+        x = substrate.integer_payload(cube, (2, 4 * g), seed=g + nd)
+
+        for alg in APPLICABILITY["all_reduce"] + ("pidcomm", "auto"):
+            got = substrate.run_per_shard(
+                cube, lambda v: comm.all_reduce(v, algorithm=alg), x)
+            check(f"AR[{bm},{alg}] g={g}", got,
+                  oracles.all_reduce(x, nd, idx))
+
+        for alg in APPLICABILITY["reduce_scatter"] + ("pidcomm", "auto"):
+            got = substrate.run_per_shard(
+                cube,
+                lambda v: comm.reduce_scatter(v, axis=nd + 1, algorithm=alg),
+                x)
+            check(f"RS[{bm},{alg}] g={g}", got,
+                  oracles.reduce_scatter(x, nd, idx, axis=1))
+
+        for alg in APPLICABILITY["all_gather"] + ("pidcomm", "auto"):
+            got = substrate.run_per_shard(
+                cube, lambda v: comm.all_gather(v, axis=nd, algorithm=alg),
+                x)
+            check(f"AG[{bm},{alg}] g={g}", got,
+                  oracles.all_gather(x, nd, idx, axis=0))
+
+        for alg in APPLICABILITY["all_to_all"] + ("pidcomm", "auto"):
+            got = substrate.run_per_shard(
+                cube,
+                lambda v: comm.all_to_all(v, split_axis=nd + 1,
+                                          concat_axis=nd + 1, algorithm=alg),
+                x)
+            check(f"AA[{bm},{alg}] g={g}", got,
+                  oracles.all_to_all(x, nd, idx, split_axis=1,
+                                     concat_axis=1))
+
+
+def pod_16dev():
+    cube = substrate.build_cube("pod2x4x2")
+    assert cube.dcn_dims == ("pod",)
+    comm = cube.comm(("pod", "dp"))
+    x = substrate.integer_payload(cube, (40,), seed=7)
+    with CommTrace() as tr:
+        got = substrate.run_per_shard(cube, lambda v: comm.all_reduce(v), x)
+    check("pod AR[110] auto (16 dev)", got, oracles.all_reduce(x, 3, (0, 1)))
+    assert tr.events[0].flow == "hierarchical", tr.events
+    hlo = substrate.lowered_text(cube, lambda v: comm.all_reduce(v), x)
+    assert ("reduce-scatter" in hlo or "reduce_scatter" in hlo), \
+        "hierarchical AR must lower to RS/AR/AG at 16 devices"
+    assert "all-gather" in hlo or "all_gather" in hlo
+    print("ok: hierarchical AR lowers to RS/AR/AG schedule at 16 devices")
+
+
+def main():
+    substrate.ensure_virtual_devices(16)
+    cube4d = substrate.build_cube("4d16")
+    sweep_cube(cube4d, ("1100", "0110", "0011", "1010", "0101", "1111"))
+    ring16 = substrate.build_cube("ring16")
+    sweep_cube(ring16, ("1",))
+    pod_16dev()
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,15 @@ def test_collective_oracles_8dev():
 
 
 @pytest.mark.slow
+def test_collective_oracles_16dev():
+    """16-virtual-device sweep: 4-D hypercube with deep `1100`-style bitmap
+    selections, the 16-wide ring, and the pod-crossing hierarchical HLO
+    check, all through the communicator API (ROADMAP open item)."""
+    out = _run("multidev16_check.py")
+    assert "hierarchical AR lowers to RS/AR/AG schedule at 16 devices" in out
+
+
+@pytest.mark.slow
 def test_parallel_consistency_all_archs():
     """Sharded (pod x data x model; FSDP+TP+EP) loss and grads match the
     single-device oracle exactly (fp32) for all 10 architectures."""

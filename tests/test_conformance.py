@@ -20,7 +20,7 @@ rooted host primitives' block placement.
 import numpy as np
 import pytest
 
-from repro.core import collectives as C
+from repro.core import comm as C
 from repro.core.collectives import APPLICABILITY, Collectives, resolve_stage
 from repro.testing import oracles, substrate
 
