@@ -15,11 +15,9 @@ from benchmarks._timing import bench, emit
 
 def _setup(shape, names):
     from repro.core.hypercube import Hypercube
-    from repro.core.collectives import Collectives
     from repro.launch.mesh import make_mesh
     mesh = make_mesh(shape, names)
-    cube = Hypercube.build(mesh, dict(zip(names, shape)))
-    return cube, Collectives(cube)
+    return Hypercube.build(mesh, dict(zip(names, shape)))
 
 
 def _smap_call(cube, f, in_specs, out_specs, *args):
@@ -41,9 +39,9 @@ def fig14_fig16_primitives(size_kb: int = 512):
     """
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from repro.core.collectives import APPLICABILITY
-    from repro.core.comm import CommTrace
-    cube, col = _setup((8,), ("d",))
+    from repro.core.comm import CommTrace, applicability
+    APPLICABILITY = applicability()
+    cube = _setup((8,), ("d",))
     comm = cube.comm("d")
     n = size_kb * 1024 // 4
     g = 8
@@ -86,26 +84,27 @@ def fig14_fig16_primitives(size_kb: int = 512):
     # rooted primitives (host <-> PE path, jit-boundary timing)
     import jax
     host = np.ones((g, n), np.float32)
-    dev = col.scatter(host, ("d",), axis=0)
+    dev = comm.scatter(host, axis=0)
     emit("fig14/scatter/pidcomm",
          bench(lambda: jax.block_until_ready(
-             col.scatter(host, ("d",), axis=0))), "")
-    emit("fig14/gather/pidcomm", bench(lambda: col.gather(dev)), "")
+             comm.scatter(host, axis=0))), "")
+    emit("fig14/gather/pidcomm", bench(lambda: comm.gather(dev)), "")
     emit("fig14/broadcast/pidcomm",
-         bench(lambda: jax.block_until_ready(col.broadcast(host))), "")
-    emit("fig14/reduce/pidcomm", bench(lambda: col.reduce(dev)), "")
+         bench(lambda: jax.block_until_ready(comm.broadcast(host))), "")
+    emit("fig14/reduce/pidcomm", bench(lambda: comm.reduce(dev)), "")
 
 
 def fig18_size_sweep():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    cube, col = _setup((8,), ("d",))
+    cube = _setup((8,), ("d",))
+    comm = cube.comm("d")
     for kb in (128, 512, 2048, 8192):
         n = kb * 1024 // 4
         x = jnp.ones((8, n), jnp.float32)
         for alg in ("naive", "pidcomm"):
             fn = _smap_call(
-                cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+                cube, lambda v: comm.all_reduce(v, algorithm=alg),
                 (P("d", None),), P(None, None), x)
             us = bench(fn)
             emit(f"fig18/all_reduce/{kb}KB/{alg}", us,
@@ -116,12 +115,13 @@ def fig19_device_sweep():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     for nd in (2, 4, 8):
-        cube, col = _setup((nd,), ("d",))
+        cube = _setup((nd,), ("d",))
+        comm = cube.comm("d")
         n = 512 * 1024 // 4
         x = jnp.ones((nd, n), jnp.float32)
         for alg in ("naive", "pidcomm"):
             fn = _smap_call(
-                cube, lambda v: col.all_reduce(v, "d", algorithm=alg),
+                cube, lambda v: comm.all_reduce(v, algorithm=alg),
                 (P("d", None),), P(None, None), x)
             us = bench(fn)
             emit(f"fig19/all_reduce/{nd}dev/{alg}", us,
@@ -134,11 +134,12 @@ def fig20_cube_shapes():
     n = 256 * 1024 // 4
     for shape in ((8,), (4, 2), (2, 2, 2)):
         names = ("x", "y", "z")[: len(shape)]
-        cube, col = _setup(shape, names)
+        cube = _setup(shape, names)
+        comm = cube.comm(names, algorithm="pidcomm")
         x = jnp.ones((8, n), jnp.float32)
         fn = _smap_call(
-            cube, lambda v: col.all_to_all(v, names, split_axis=1,
-                                           concat_axis=1),
+            cube, lambda v: comm.all_to_all(v, split_axis=1,
+                                            concat_axis=1),
             (P(names, None),), P(names, None), x)
         us = bench(fn)
         tag = "x".join(str(s) for s in shape)
@@ -150,11 +151,12 @@ def fig23_topologies():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.core.collectives import ring_all_reduce, tree_all_reduce
-    cube, col = _setup((8,), ("d",))
+    cube = _setup((8,), ("d",))
+    comm = cube.comm("d", algorithm="pidcomm")
     n = 512 * 1024 // 4
     x = jnp.ones((8, n), jnp.float32)
     fns = {
-        "hypercube": lambda v: col.all_reduce(v, "d"),
+        "hypercube": lambda v: comm.all_reduce(v),
         "ring": lambda v: ring_all_reduce(v[0], cube, "d")[None],
         "tree": lambda v: tree_all_reduce(v, cube, "d"),
     }
@@ -166,19 +168,81 @@ def fig23_topologies():
 
     # 23(b): hierarchical multi-pod AR (pod axis = DCN domain)
     from repro.core.hypercube import Hypercube
-    from repro.core.collectives import Collectives
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cube2 = Hypercube.build(mesh, {"pod": 2, "dp": 2, "tp": 2})
-    col2 = Collectives(cube2)
+    comm2 = cube2.comm(("pod", "dp"))
     x2 = jnp.ones((8, n), jnp.float32)
     for alg, tag in (("naive", "flat-naive"), ("pr", "flat-gathered"),
                      ("pidcomm", "hierarchical")):
         fn = _smap_call(
-            cube2, lambda v: col2.all_reduce(v, ("pod", "dp"), algorithm=alg),
+            cube2, lambda v: comm2.all_reduce(v, algorithm=alg),
             (P(("pod", "dp"), None),), P(None, None), x2)
         us = bench(fn)
         emit(f"fig23b/pod_all_reduce/{tag}", us, "")
+
+
+def program_fusion(size_kb: int = 512):
+    """Deferred-program benchmark: an eager rs+ag pair vs the recorded
+    program whose lowering fuses the pair into one all_reduce, and a
+    16-leaf gradient sync vs its coalesced one-bucket program."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.comm import CommTrace
+    from repro.core.hypercube import Hypercube
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cube = Hypercube.build(mesh, {"pod": 2, "dp": 2, "tp": 2})
+    comm = cube.comm(("pod", "dp"))
+    n = size_kb * 1024 // 4
+    x = jnp.ones((8, n), jnp.float32)
+    in_specs = (P(("pod", "dp", "tp"), None),)
+    out_specs = P(("pod", "dp", "tp"), None)
+
+    eager = _smap_call(
+        cube, lambda v: comm.all_gather(comm.reduce_scatter(v, axis=1),
+                                        axis=1),
+        in_specs, out_specs, x)
+    us_eager = bench(eager)
+    emit("program/rs_ag/eager", us_eager, "events=2")
+
+    prog = cube.program(name="bench-rsag")
+    with prog:
+        a = prog.input(jax.ShapeDtypeStruct((1, n), jnp.float32))
+        prog.output(comm.all_gather(comm.reduce_scatter(a, axis=1), axis=1))
+    low = prog.lower()
+    with CommTrace() as tr:
+        fused = _smap_call(cube, lambda v: low.execute(v),
+                           in_specs, out_specs, x)
+        us_fused = bench(fused)
+    ev = tr.events[0]
+    emit("program/rs_ag/fused", us_fused,
+         f"events={len(tr.events)};flow={ev.flow}"
+         f";fused_from={len(ev.fused_from)}"
+         f";speedup_vs_eager={us_eager / us_fused:.2f}")
+
+    grads_comm = cube.comm(("pod", "dp", "tp"))
+
+    def per_leaf(*vs):
+        return tuple(grads_comm.all_reduce(v) for v in vs)
+
+    us_leaf = bench(_smap_call(cube, per_leaf,
+                               tuple(in_specs * 16), tuple([out_specs] * 16),
+                               *([jnp.ones((8, 4096), jnp.float32)] * 16)))
+    emit("program/grad_sync/per_leaf", us_leaf, "events=16")
+
+    gprog = cube.program(name="bench-coalesce")
+    with gprog:
+        ins = [gprog.input(jax.ShapeDtypeStruct((1, 4096), jnp.float32))
+               for _ in range(16)]
+        gprog.output(*(grads_comm.all_reduce(v) for v in ins))
+    glow = gprog.lower()
+    us_coal = bench(_smap_call(cube, lambda *vs: glow.execute(*vs),
+                               tuple(in_specs * 16), tuple([out_specs] * 16),
+                               *([jnp.ones((8, 4096), jnp.float32)] * 16)))
+    emit("program/grad_sync/coalesced", us_coal,
+         f"events=1;speedup_vs_per_leaf={us_leaf / us_coal:.2f}")
 
 
 def run():
@@ -187,3 +251,4 @@ def run():
     fig19_device_sweep()
     fig20_cube_shapes()
     fig23_topologies()
+    program_fusion()

@@ -3,11 +3,15 @@
 Builds a 2x2x2 virtual hypercube over 8 (fake CPU) devices, binds
 communicators to dim selections (``cube.comm``), runs multi-instance
 collectives over cube slices (paper Fig. 5), sweeps the Table II algorithm
-stages, and lets planner-driven ``algorithm="auto"`` dispatch pick the
+stages, lets planner-driven ``algorithm="auto"`` dispatch pick the
 §IX-A hierarchical flow on a pod-crossing all-reduce -- with every dispatch
-observed by a :class:`CommTrace`.
+observed by a :class:`CommTrace` -- and records a deferred ``cube.program()``
+whose lowering fuses a reduce_scatter+all_gather chain into one all_reduce.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set ``QUICKSTART_SUMMARY=/path.json`` to dump the CommTrace summaries
+(CI uploads them as the API-surface artifact).
 """
 import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
@@ -89,3 +93,38 @@ for ev in trace.events:
           f"est {ev.seconds*1e6:.2f}us)")
 assert trace.events and trace.events[0].flow == "hierarchical"
 print("auto dispatch executed the planner's hierarchical pick")
+
+# 6. deferred programs (record -> optimize -> execute): composed patterns
+#    are recorded as a CommProgram, and lower() optimizes the whole chain --
+#    here the reduce_scatter + all_gather pair (the two halves of a gradient
+#    sync written out by hand) fuses into ONE all_reduce, which on the
+#    pod-crossing group executes the hierarchical split.  CommTrace.summary()
+#    shows the provenance: one event, fused from two recorded ops.
+with grad_ar.program(name="quickstart-fuse") as prog:
+    a = prog.input(jax.ShapeDtypeStruct((1, 1, 1, 64), jnp.float32))
+    shard = grad_ar.reduce_scatter(a, axis=3)
+    full = grad_ar.all_gather(shard, axis=3)
+    prog.output(full)
+lowered = prog.lower()
+print(lowered.describe())
+assert len(lowered.ops) == 1 and lowered.ops[0].fused_from == (0, 1)
+
+with CommTrace() as ptrace:
+    out2 = jax.jit(shard_map(
+        lambda v: lowered.execute(v), mesh=prod.mesh,
+        in_specs=P("pod", "dp", "tp", None),
+        out_specs=P("pod", "dp", "tp", None), check_vma=False))(g)
+np.testing.assert_array_equal(np.asarray(out2)[0, 0], np.asarray(out)[0, 0])
+summary = ptrace.summary()
+print("program trace summary:", summary)
+assert summary["fused_events"] == 1 and summary["events"] == 1
+assert summary["programs"] == ["quickstart-fuse"]
+print("record->optimize->execute: rs+ag fused into one hierarchical "
+      "all_reduce, bit-identical to the eager result")
+
+import json, os  # noqa: E402
+if os.environ.get("QUICKSTART_SUMMARY"):
+    with open(os.environ["QUICKSTART_SUMMARY"], "w") as f:
+        json.dump({"eager": trace.summary(), "program": summary}, f,
+                  indent=1)
+    print("wrote", os.environ["QUICKSTART_SUMMARY"])

@@ -23,7 +23,6 @@ from jax import lax
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import Collectives
 from repro.core.hypercube import Hypercube
 
 
@@ -36,9 +35,11 @@ def _smap(cube, f, in_specs, out_specs):
 def make_dlrm(cube: Hypercube, *, batch_per_shard=64, emb_dim=32,
               n_tables=4, rows=512, algorithm="pidcomm"):
     """3D hypercube; communication chain of paper Fig. 11."""
-    col = Collectives(cube)
     dims = cube.dim_names[-3:]
     x, y, z = dims
+    c_xyz = cube.comm(dims)
+    c_y = cube.comm((y,))
+    c_xz = cube.comm((x, z))
     nx, ny, nz = (cube.size(d) for d in dims)
     G = nx * ny * nz
     Dl = max(emb_dim // nz, 1)
@@ -50,15 +51,15 @@ def make_dlrm(cube: Hypercube, *, batch_per_shard=64, emb_dim=32,
     def step(tables, idx, w0, w1):
         emb = jax.vmap(lambda t, i: t[i])(tables, idx % rows)  # (T, b_l, Dl)
         emb = jnp.moveaxis(emb, 0, 1).reshape(b_l, F)
-        ex = col.all_to_all(emb, dims, split_axis=0, concat_axis=1,
-                            algorithm=algorithm)         # (b_l/G, F*G)
-        red = col.reduce_scatter(ex, (y,), axis=1, op="add",
+        ex = c_xyz.all_to_all(emb, split_axis=0, concat_axis=1,
+                              algorithm=algorithm)       # (b_l/G, F*G)
+        red = c_y.reduce_scatter(ex, axis=1, op="add",
                                  algorithm=algorithm)    # (b_l/G, C1)
-        rel = col.all_to_all(red, (x, z), split_axis=1, concat_axis=0,
-                             algorithm=algorithm)        # (b_l/G*nx*nz, C2)
+        rel = c_xz.all_to_all(red, split_axis=1, concat_axis=0,
+                              algorithm=algorithm)       # (b_l/G*nx*nz, C2)
         h = jax.nn.relu(rel @ w0)
         out = h @ w1
-        return col.all_reduce(out.sum(), dims, algorithm=algorithm)
+        return c_xyz.all_reduce(out.sum(), algorithm=algorithm)
 
     tables = jnp.ones((n_tables, rows, Dl), jnp.float32)
     idx = (jnp.arange(b_l * n_tables).reshape(n_tables, b_l) % rows
@@ -72,10 +73,9 @@ def make_dlrm(cube: Hypercube, *, batch_per_shard=64, emb_dim=32,
 # ------------------------------------------------------------------ GNN
 def make_gnn(cube: Hypercube, *, n_nodes=2048, feat=256, variant="rs_ar",
              algorithm="pidcomm"):
-    col = Collectives(cube)
     r, c = cube.dim_names[-2:]
     nr, nc = cube.size(r), cube.size(c)
-    col_ = col
+    c_c = cube.comm((c,))
 
     adj = jnp.ones((n_nodes // nr, n_nodes // nc), jnp.float32) / n_nodes
     feats = jnp.ones((n_nodes // nc, feat), jnp.float32)
@@ -85,18 +85,18 @@ def make_gnn(cube: Hypercube, *, n_nodes=2048, feat=256, variant="rs_ar",
 
         def run(adj, feats, w):
             agg = adj @ feats                            # partial over c
-            agg = col_.reduce_scatter(agg, (c,), axis=1, op="add",
-                                      algorithm=algorithm)
+            agg = c_c.reduce_scatter(agg, axis=1, op="add",
+                                     algorithm=algorithm)
             comb = agg @ w                               # partial over c
-            out = col_.all_reduce(comb, (c,), algorithm=algorithm)
+            out = c_c.all_reduce(comb, algorithm=algorithm)
             return jax.nn.relu(out).sum()
     else:
         w = jnp.ones((feat, feat // nc), jnp.float32) * 0.01
 
         def run(adj, feats, w):
-            agg = col_.all_reduce(adj @ feats, (c,), algorithm=algorithm)
+            agg = c_c.all_reduce(adj @ feats, algorithm=algorithm)
             comb = agg @ w                               # 2D tiled result
-            out = col_.all_gather(comb, (c,), axis=1, algorithm=algorithm)
+            out = c_c.all_gather(comb, axis=1, algorithm=algorithm)
             return jax.nn.relu(out).sum()
 
     fn = _smap(cube, run, (P(), P(), P()), P())
@@ -105,8 +105,8 @@ def make_gnn(cube: Hypercube, *, n_nodes=2048, feat=256, variant="rs_ar",
 
 # ------------------------------------------------------------- BFS / CC
 def make_bfs(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
-    col = Collectives(cube)
     dims = cube.dim_names
+    comm = cube.comm(dims)
     n_l = n_nodes // cube.ndev
     adj = ((jnp.arange(n_l)[:, None] * 31 + jnp.arange(n_nodes)[None] * 17)
            % 97 < 3).astype(jnp.float32)
@@ -119,7 +119,7 @@ def make_bfs(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
             me = lax.axis_index(dims)
             upd = jnp.zeros((n_nodes,), jnp.float32)
             upd = lax.dynamic_update_slice(upd, local, (me * n_l,))
-            new = col.all_reduce(upd, dims, op="max", algorithm=algorithm)
+            new = comm.all_reduce(upd, op="max", algorithm=algorithm)
             return jnp.maximum(visited, new)
 
         visited = lax.fori_loop(0, iters, body, visited)
@@ -130,8 +130,8 @@ def make_bfs(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
 
 
 def make_cc(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
-    col = Collectives(cube)
     dims = cube.dim_names
+    comm = cube.comm(dims)
     n_l = n_nodes // cube.ndev
     adj = ((jnp.arange(n_l)[:, None] * 13 + jnp.arange(n_nodes)[None] * 7)
            % 89 < 3)
@@ -145,7 +145,7 @@ def make_cc(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
             me = lax.axis_index(dims)
             upd = jnp.full((n_nodes,), big)
             upd = lax.dynamic_update_slice(upd, neigh, (me * n_l,))
-            new = col.all_reduce(upd, dims, op="min", algorithm=algorithm)
+            new = comm.all_reduce(upd, op="min", algorithm=algorithm)
             return jnp.minimum(labels, new)
 
         labels = lax.fori_loop(0, iters, body, labels)
@@ -158,8 +158,8 @@ def make_cc(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
 # ------------------------------------------------------------------ MLP
 def make_mlp(cube: Hypercube, *, features=2048, layers=5, batch=64,
              algorithm="pidcomm"):
-    col = Collectives(cube)
     dims = cube.dim_names
+    comm = cube.comm(dims)
     f_l = features // cube.ndev
     ws = tuple(jnp.ones((f_l, features), jnp.float32) * 0.001
                for _ in range(layers))
@@ -168,8 +168,8 @@ def make_mlp(cube: Hypercube, *, features=2048, layers=5, batch=64,
         h = x                                            # (batch, f_l)
         for w in ws:
             full = jax.nn.relu(h @ w)                    # partial (batch, F)
-            h = col.reduce_scatter(full, dims, axis=1, op="add",
-                                   algorithm=algorithm)
+            h = comm.reduce_scatter(full, axis=1, op="add",
+                                    algorithm=algorithm)
         return h.sum()
 
     x = jnp.ones((batch, f_l), jnp.float32)

@@ -8,7 +8,11 @@ from repro.core.comm import (
     get_algorithm, register_algorithm, registered_algorithms, resolve_stage)
 from repro.core.collectives import (
     Collectives, APPLICABILITY, ring_all_reduce, tree_all_reduce)
-from repro.core.planner import CommEstimate, estimate, plan
+from repro.core.planner import (
+    CommEstimate, ProgramOpSpec, ProgramPlan, estimate, plan, plan_program)
+from repro.core.program import (
+    CommFuture, CommOp, CommProgram, LoweredProgram, ProgramExecution,
+    ProgramValue)
 from repro.core.compress import (
     quantize_int8, dequantize_int8, compressed_pod_all_reduce,
     compressed_all_reduce)
@@ -20,7 +24,10 @@ __all__ = [
     "registered_algorithms", "resolve_stage",
     "Collectives", "APPLICABILITY",
     "ring_all_reduce", "tree_all_reduce",
-    "CommEstimate", "estimate", "plan",
+    "CommEstimate", "ProgramOpSpec", "ProgramPlan",
+    "estimate", "plan", "plan_program",
+    "CommFuture", "CommOp", "CommProgram", "LoweredProgram",
+    "ProgramExecution", "ProgramValue",
     "quantize_int8", "dequantize_int8", "compressed_pod_all_reduce",
     "compressed_all_reduce",
 ]

@@ -20,6 +20,8 @@ the hierarchical ICI/DCN split of §IX-A when the group crosses pods".
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 from repro.core import comm as _comm
@@ -55,6 +57,11 @@ class Collectives:
     """
 
     def __init__(self, cube: Hypercube):
+        warnings.warn(
+            "repro.core.collectives.Collectives is deprecated: bind a "
+            "communicator with cube.comm(dims) (or topo.comm(axes)), and "
+            "record composed patterns with cube.program()",
+            DeprecationWarning, stacklevel=2)
         self.cube = cube
         self._comms: dict[tuple[str, ...], _comm.Communicator] = {}
 

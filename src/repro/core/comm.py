@@ -180,6 +180,11 @@ class CommEvent:
     ici_bytes: float             # planner estimate, per device
     dcn_bytes: float
     seconds: float
+    # deferred-program provenance (repro.core.program): the CommProgram this
+    # dispatch executed under, and the recorded op ids a fused/coalesced op
+    # was rewritten from.  Empty for eager dispatches.
+    program_id: str | None = None
+    fused_from: tuple[int, ...] = ()
 
 
 _TRACES: list["CommTrace"] = []
@@ -224,8 +229,13 @@ class CommTrace:
             d["dcn_bytes"] += e.dcn_bytes
             d["est_seconds"] += e.seconds
         ici, dcn = self.total_bytes()
+        fused = [e for e in self.events if e.fused_from]
         return {"events": len(self.events), "ici_bytes": ici,
-                "dcn_bytes": dcn, "by_flow": by}
+                "dcn_bytes": dcn, "by_flow": by,
+                "fused_events": len(fused),
+                "fused_from_ops": sum(len(e.fused_from) for e in fused),
+                "programs": sorted({e.program_id for e in self.events
+                                    if e.program_id})}
 
 
 def _emit(event: CommEvent) -> None:
@@ -248,6 +258,13 @@ _FLOW_TO_PLANNER = {
     "hierarchical": "pidcomm",
     "compressed": "compressed",
 }
+
+
+def program_mod():
+    """Deferred import of :mod:`repro.core.program` (cycle: program records
+    through Communicator dispatch)."""
+    from repro.core import program
+    return program
 
 
 class Communicator:
@@ -291,6 +308,12 @@ class Communicator:
         return (f"Communicator[{self.cube.describe()} dims={self.bitmap} "
                 f"g={self.group_size} inst={self.num_instances} "
                 f"slow={self.slow_dims or '()'}]")
+
+    def program(self, *, name: str = ""):
+        """Open a deferred :class:`repro.core.program.CommProgram` recording
+        scope over this communicator's cube (any communicator of the same
+        cube may record into it -- multi-communicator mixes included)."""
+        return program_mod().CommProgram(self.cube, name=name)
 
     # ------------------------------------------------------------ dispatch
     def _resolve_flow(self, primitive: str, algorithm: str,
@@ -338,8 +361,15 @@ class Communicator:
         return stage
 
     def _dispatch(self, primitive: str, x, *, algorithm: str | None,
-                  op: str = "add", **kwargs):
+                  op: str = "add", _meta: tuple | None = None, **kwargs):
         alg = self.default_algorithm if algorithm is None else algorithm
+        rec = program_mod().active_program()
+        if rec is not None:
+            # deferred mode: append a CommOp to the recording program
+            # instead of dispatching; execution re-enters here with
+            # recording suspended and ``_meta`` carrying provenance.
+            return rec.record_op(self, primitive, x, algorithm=alg, op=op,
+                                 kwargs=kwargs)
         payload = _payload_bytes(x)
         flow, est = self._resolve_flow(primitive, alg, payload, op)
         spec = get_algorithm(primitive, flow)
@@ -348,13 +378,15 @@ class Communicator:
                 est = planner.estimate(
                     self.cube, primitive, self.dims, payload,
                     algorithm=_FLOW_TO_PLANNER.get(flow, "direct"))
+            program_id, fused_from = _meta if _meta else (None, ())
             _emit(CommEvent(
                 primitive=primitive, bitmap=self.bitmap, dims=self.dims,
                 algorithm=alg, flow=flow, stage=spec.stage,
                 group_size=self.group_size,
                 num_instances=self.num_instances, payload_bytes=payload,
                 ici_bytes=est.ici_bytes, dcn_bytes=est.dcn_bytes,
-                seconds=est.seconds))
+                seconds=est.seconds, program_id=program_id,
+                fused_from=tuple(fused_from)))
         return spec.fn(self, x, op=op, **kwargs) \
             if primitive in ("all_reduce", "reduce_scatter", "reduce") \
             else spec.fn(self, x, **kwargs)
@@ -385,6 +417,45 @@ class Communicator:
         if self.group_size == 1:
             return x
         return self._dispatch("all_reduce", x, algorithm=algorithm, op=op)
+
+    def all_reduce_with_error(self, x: Array, *, error: Array | None = None,
+                              block: int = 256) -> tuple[Array, Array]:
+        """§V-C compressed (int8 DCN hop) additive all-reduce that also
+        returns the local quantization error, for callers that persist an
+        error-feedback buffer across steps (``runtime.trainer``).
+
+        ``error`` is the previous step's returned error (replicated within
+        the fast/ICI group, per-pod values).  It is folded in scaled by
+        1/|ICI|: the fast-domain reduce inside the flow sums the |ICI|
+        replicas back to exactly one correction per pod.
+
+        Always dispatches eagerly (even inside a program recording scope:
+        the two-output flow has no registry body) and records a
+        ``compressed`` CommEvent like the single-output registry algorithm.
+        """
+        from repro.core import compress
+        if not self.slow_dims:
+            raise ValueError(
+                "all_reduce_with_error needs a DCN-crossing group; "
+                f"{self.dims} is entirely intra-pod")
+        if error is not None:
+            gf = self.cube.group_size(self.fast_dims) if self.fast_dims \
+                else 1
+            x = x + error / gf
+        payload = _payload_bytes(x)
+        if _TRACES:
+            est = planner.estimate(self.cube, "all_reduce", self.dims,
+                                   payload, algorithm="compressed",
+                                   block=block)
+            _emit(CommEvent(
+                primitive="all_reduce", bitmap=self.bitmap, dims=self.dims,
+                algorithm="compressed", flow="compressed", stage="cm",
+                group_size=self.group_size,
+                num_instances=self.num_instances, payload_bytes=payload,
+                ici_bytes=est.ici_bytes, dcn_bytes=est.dcn_bytes,
+                seconds=est.seconds))
+        return compress.compressed_pod_all_reduce(
+            x, self.cube, self.fast_dims, self.slow_dims, block=block)
 
     # ------------------------------------------------- rooted (host) four
     def scatter(self, host_value, *, axis: int,

@@ -185,6 +185,15 @@ class Hypercube:
         from repro.core.comm import Communicator  # deferred: avoid cycle
         return Communicator(self, dims, default_algorithm=algorithm)
 
+    def program(self, *, name: str = ""):
+        """Open a deferred :class:`repro.core.program.CommProgram` recording
+        scope: inside ``with cube.program() as prog``, every communicator
+        primitive on this cube appends a CommOp instead of dispatching;
+        ``prog.lower()`` fuses/coalesces/plans and ``prog.execute(*inputs)``
+        runs the optimized schedule through the algorithm registry."""
+        from repro.core.program import CommProgram  # deferred: avoid cycle
+        return CommProgram(self, name=name)
+
     # ------------------------------------------------------------- shardings
     def sharding(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)

@@ -15,6 +15,7 @@ Hardware constants are TPU v5e (the deployment target):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Mapping
 
@@ -145,6 +146,119 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
     return CommEstimate(primitive, "direct", sched, ici, dcn,
                         _bw_time(ici, dcn),
                         _table_ii_stage(primitive, "direct"))
+
+
+# -------------------------------------------------------- program planning
+@dataclasses.dataclass(frozen=True)
+class ProgramOpSpec:
+    """One CommProgram op as the planner sees it (shapes only)."""
+    op_id: int
+    primitive: str
+    dims: tuple[str, ...]
+    payload_bytes: float
+    deps: tuple[int, ...] = ()
+    algorithm: str = "auto"
+    op: str = "add"                    # reducer, for escalation parity
+    allow_compressed: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramPlan:
+    """Joint plan for a whole program: per-op estimates under one shared
+    ICI/DCN budget, an explicit interleaving order for independent ops, and
+    the overlapped vs serial time bounds."""
+    estimates: Mapping[int, CommEstimate]
+    order: tuple[int, ...]             # dependency-safe dispatch order
+    levels: tuple[tuple[int, ...], ...]  # independent-op waves
+    ici_bytes: float
+    dcn_bytes: float
+    seconds: float                     # per-level max(ICI budget, DCN budget)
+    serial_seconds: float              # sum of per-op estimates
+
+
+# planner algorithm to estimate for an explicitly requested dispatch
+# algorithm; anything unlisted (Table II stages, ring/tree, "pidcomm") runs
+# the runtime's native flow, whose byte model is "direct".
+_REQUEST_TO_PLANNER = {
+    "naive": "naive",
+    "hierarchical": "pidcomm",
+    "compressed": "compressed",
+}
+
+
+def plan_program(cube: Hypercube, ops) -> ProgramPlan:
+    """One planning pass over a whole CommProgram.
+
+    Per op: ``algorithm="auto"`` gets the full :func:`plan` candidate race;
+    explicit requests get the matching :func:`estimate`.  Ops are then
+    levelled by data dependency; within a level (independent ops) the
+    dispatch order interleaves ICI-dominant and DCN-dominant ops so both
+    domains stream concurrently, and the level's time is the larger of the
+    two domain budgets (plus any op that exceeds both alone).
+    """
+    est: dict[int, CommEstimate] = {}
+    for o in ops:
+        if o.algorithm in ("auto", "pidcomm"):
+            est[o.op_id] = plan(cube, o.primitive, o.dims, o.payload_bytes,
+                                allow_compressed=o.allow_compressed)
+        else:
+            alg = _REQUEST_TO_PLANNER.get(o.algorithm)
+            if alg is None:
+                # Table II stage / ring / tree: native flow, "direct" byte
+                # model -- except an additive im-resolving all_reduce, which
+                # the dispatcher escalates to the hierarchical split when
+                # the group spans both domains (estimate("pidcomm") applies
+                # exactly that condition, falling back to direct otherwise).
+                alg = "direct"
+                if (o.primitive == "all_reduce" and o.op == "add"
+                        and o.algorithm not in ("ring", "tree")):
+                    from repro.core.comm import resolve_stage
+                    try:
+                        stage = resolve_stage("all_reduce", o.algorithm)
+                    except ValueError:
+                        stage = None
+                    if stage == "im":
+                        alg = "pidcomm"
+            est[o.op_id] = estimate(
+                cube, o.primitive, o.dims, o.payload_bytes, alg)
+
+    # dependency levels (wave l = ops whose deps all sit in waves < l)
+    level_of: dict[int, int] = {}
+    remaining = {o.op_id: o for o in ops}
+    levels: list[tuple[int, ...]] = []
+    while remaining:
+        wave = [oid for oid, o in remaining.items()
+                if all(d in level_of or d not in est for d in o.deps)]
+        if not wave:
+            raise ValueError("cyclic dependencies in program ops")
+        # explicit interleaving: alternate DCN-dominant and ICI-dominant ops
+        # (longest first within each domain) so neither link sits idle
+        dcn = sorted((oid for oid in wave if est[oid].dominant() == "dcn"),
+                     key=lambda i: -est[i].seconds)
+        ici = sorted((oid for oid in wave if est[oid].dominant() == "ici"),
+                     key=lambda i: -est[i].seconds)
+        inter = []
+        for pair in itertools.zip_longest(dcn, ici):
+            inter += [i for i in pair if i is not None]
+        levels.append(tuple(inter))
+        for oid in inter:
+            level_of[oid] = len(levels) - 1
+            del remaining[oid]
+
+    seconds = 0.0
+    for wave in levels:
+        ici_t = sum(est[i].ici_bytes / ICI_BW for i in wave)
+        dcn_t = sum(est[i].dcn_bytes / DCN_BW for i in wave)
+        slowest = max(est[i].seconds for i in wave)
+        seconds += max(ici_t, dcn_t, slowest)
+    return ProgramPlan(
+        estimates=est,
+        order=tuple(oid for wave in levels for oid in wave),
+        levels=tuple(levels),
+        ici_bytes=sum(e.ici_bytes for e in est.values()),
+        dcn_bytes=sum(e.dcn_bytes for e in est.values()),
+        seconds=seconds,
+        serial_seconds=sum(e.seconds for e in est.values()))
 
 
 def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,

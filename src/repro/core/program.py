@@ -1,0 +1,646 @@
+"""Deferred CommProgram IR: record -> optimize -> execute collective programs.
+
+PID-Comm's headline gains come from *composed* communication -- applications
+chain reduce_scatter / all_gather / all_to_all across hypercube dims, and the
+framework wins by scheduling the whole pattern rather than one primitive at a
+time (paper SVII apps, SIX-A hierarchy).  The eager ``Communicator`` plans
+each call in isolation; this module adds the whole-program surface:
+
+  recording
+      ``cube.program()`` / ``comm.program()`` / ``topo.program()`` open a
+      scope in which every ``Communicator`` primitive appends a
+      :class:`CommOp` (abstract shape/dtype, group bitmap, data deps)
+      instead of dispatching, and returns a symbolic :class:`ProgramValue`.
+      Concrete arrays (including jax tracers) passed into a primitive are
+      captured as program *constants*; ``prog.input(aval)`` declares
+      placeholders bound positionally at ``execute(*inputs)``.
+
+  ``program.lower()``
+      runs the optimization pipeline:
+        * peephole fusion -- a ``reduce_scatter`` whose only consumer is an
+          ``all_gather`` on the same axis/group becomes one ``all_reduce``
+          (and the reverse split when the cost model strictly prefers it);
+        * same-group coalescing -- independent small all-reduces on the same
+          (group, op, dtype, algorithm) flatten/concat into one bucketed
+          dispatch (the trainer's ``sync_replicated_grads`` is the client);
+        * joint planning -- one :func:`repro.core.planner.plan_program` pass
+          estimating every op under a shared ICI/DCN budget and choosing an
+          explicit interleaving order for independent ops.
+
+  execution
+      ``program.execute(*inputs)`` runs the optimized schedule through the
+      existing algorithm registry (each op dispatches via
+      ``Communicator._dispatch``, so stage resolution, planner estimates and
+      CommTrace instrumentation are identical to the eager path); every
+      emitted :class:`~repro.core.comm.CommEvent` carries this program's
+      ``program_id`` and the ``fused_from`` provenance of rewritten ops.
+      ``execute_async()`` returns per-op :class:`CommFuture` s backed by
+      dependency-ordered dispatch.
+
+Eager single-op calls remain supported -- a one-op program executes the
+identical registry body, so the conformance matrix is bit-identical through
+both paths (tests/test_program.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import planner
+
+# Coalescing folds all-reduces at or below this per-device payload into one
+# bucketed dispatch (gradient-leaf scale; large tensors keep their own op).
+DEFAULT_COALESCE_BYTES = 1 << 20
+
+_PROGRAM_IDS = itertools.count()
+
+# Stack of CommPrograms currently recording.  ``Communicator._dispatch``
+# consults :func:`active_program` on every call; execution temporarily
+# suspends recording so a program can be executed from inside another scope.
+_RECORDING: list["CommProgram"] = []
+_SUSPENDED = 0
+
+
+def active_program() -> "CommProgram | None":
+    """The innermost recording scope, or None (also None mid-execution)."""
+    if _SUSPENDED or not _RECORDING:
+        return None
+    return _RECORDING[-1]
+
+
+class _suspend_recording:
+    def __enter__(self):
+        global _SUSPENDED
+        _SUSPENDED += 1
+
+    def __exit__(self, *exc):
+        global _SUSPENDED
+        _SUSPENDED -= 1
+        return False
+
+
+# ------------------------------------------------------------------- values
+class ProgramValue:
+    """Symbolic SSA value inside a :class:`CommProgram` (abstract aval only).
+
+    Mimics enough of the array protocol (shape/dtype/size/ndim) that shape
+    arithmetic and payload accounting treat it like the array it stands for.
+    """
+
+    __slots__ = ("program", "vid")
+
+    def __init__(self, program: "CommProgram", vid: int):
+        self.program = program
+        self.vid = vid
+
+    @property
+    def aval(self):
+        return self.program._avals[self.vid]
+
+    @property
+    def shape(self):
+        return self.aval.shape
+
+    @property
+    def dtype(self):
+        return self.aval.dtype
+
+    @property
+    def ndim(self) -> int:
+        return len(self.aval.shape)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.aval.shape)) if self.aval.shape else 1
+
+    def __repr__(self):
+        return (f"ProgramValue(v{self.vid}: "
+                f"{self.dtype}{list(self.shape)} of {self.program.program_id})")
+
+
+def _aval_of(x) -> jax.ShapeDtypeStruct:
+    shape = tuple(getattr(x, "shape", ()))
+    dtype = getattr(x, "dtype", None)
+    return jax.ShapeDtypeStruct(shape, np.dtype(dtype if dtype is not None
+                                                else np.float32))
+
+
+def _result_aval(comm, primitive: str, aval, kwargs) -> jax.ShapeDtypeStruct:
+    """Abstract per-shard output shape of one primitive (shape inference)."""
+    shape = list(aval.shape)
+    g = comm.group_size
+
+    def ax(name):
+        a = kwargs[name]
+        return a % len(shape) if shape else 0
+
+    if primitive in ("all_reduce", "scatter", "broadcast", "gather"):
+        pass
+    elif primitive == "reduce_scatter":
+        a = ax("axis")
+        if shape[a] % g:
+            raise ValueError(
+                f"reduce_scatter axis {a} of {tuple(shape)} not divisible by "
+                f"group size {g}")
+        shape[a] //= g
+    elif primitive == "all_gather":
+        shape[ax("axis")] *= g
+    elif primitive == "all_to_all":
+        s, c = ax("split_axis"), ax("concat_axis")
+        if shape[s] % g:
+            raise ValueError(
+                f"all_to_all split axis {s} of {tuple(shape)} not divisible "
+                f"by group size {g}")
+        shape[s] //= g
+        shape[c] *= g
+    elif primitive == "reduce":
+        del shape[ax("axis")]
+    else:
+        raise ValueError(f"unknown primitive {primitive!r}")
+    return jax.ShapeDtypeStruct(tuple(shape), aval.dtype)
+
+
+# ---------------------------------------------------------------------- ops
+@dataclasses.dataclass
+class CommOp:
+    """One recorded (or rewritten) collective in the program IR."""
+    op_id: int
+    primitive: str
+    comm: Any                      # repro.core.comm.Communicator
+    algorithm: str                 # requested ("auto", stage, registered)
+    op: str                        # reducer name for reduction primitives
+    kwargs: dict                   # axis / split_axis / concat_axis
+    in_vids: tuple[int, ...]
+    out_vids: tuple[int, ...]
+    fused_from: tuple[int, ...] = ()   # provenance: recorded op ids
+    coalesced: bool = False
+
+    @property
+    def bitmap(self) -> str:
+        return self.comm.bitmap
+
+    def describe(self, program: "CommProgram") -> str:
+        ins = ",".join(f"v{v}" for v in self.in_vids)
+        outs = ",".join(f"v{v}" for v in self.out_vids)
+        tag = ""
+        if self.fused_from:
+            kind = "coalesced" if self.coalesced else "fused"
+            tag = f" [{kind} from {list(self.fused_from)}]"
+        return (f"op{self.op_id}: {outs} = {self.primitive}"
+                f"[{self.bitmap}/{self.algorithm}]({ins}){tag}")
+
+
+# ------------------------------------------------------------------ program
+class CommProgram:
+    """A recorded collective program over one hypercube.
+
+    Use as a context manager; inside the scope every bound
+    :class:`~repro.core.comm.Communicator` of the same cube appends ops here
+    instead of dispatching.  ``lower()`` optimizes + plans, ``execute()``
+    runs the optimized schedule (lowering on first use).
+    """
+
+    def __init__(self, cube, *, name: str = ""):
+        self.cube = cube
+        self.program_id = name or f"prog{next(_PROGRAM_IDS)}"
+        self._avals: list[jax.ShapeDtypeStruct] = []
+        self._consts: dict[int, Any] = {}
+        self._input_vids: list[int] = []
+        self._output_vids: list[int] = []
+        self._ops: list[CommOp] = []
+        self._open = False
+        self._closed = False
+        self._lowered: "LoweredProgram | None" = None
+
+    # ------------------------------------------------------------ recording
+    def __enter__(self) -> "CommProgram":
+        if self._closed:
+            raise RuntimeError(f"{self.program_id} already recorded")
+        _RECORDING.append(self)
+        self._open = True
+        return self
+
+    def __exit__(self, *exc):
+        _RECORDING.remove(self)
+        self._open = False
+        self._closed = True
+        return False
+
+    def _new_value(self, aval) -> ProgramValue:
+        self._avals.append(aval)
+        return ProgramValue(self, len(self._avals) - 1)
+
+    def input(self, x) -> ProgramValue:
+        """Declare a positional input placeholder.  ``x`` is an abstract
+        value (``jax.ShapeDtypeStruct``), an array to take shape/dtype from,
+        or a ``(shape, dtype)`` pair."""
+        if isinstance(x, tuple) and len(x) == 2 and not hasattr(x, "dtype"):
+            aval = jax.ShapeDtypeStruct(tuple(x[0]), np.dtype(x[1]))
+        else:
+            aval = _aval_of(x)
+        v = self._new_value(aval)
+        self._input_vids.append(v.vid)
+        return v
+
+    def output(self, *values: ProgramValue) -> None:
+        """Declare program outputs (in ``execute`` return order).  Without
+        any declaration, every op result not consumed by another op is an
+        output, in creation order."""
+        for v in values:
+            if not isinstance(v, ProgramValue) or v.program is not self:
+                raise ValueError(f"{v!r} is not a value of this program")
+            self._output_vids.append(v.vid)
+
+    def record_op(self, comm, primitive: str, x, *, algorithm: str,
+                  op: str = "add", kwargs: dict | None = None
+                  ) -> ProgramValue:
+        """Append one op (called by ``Communicator._dispatch`` while this
+        scope is active).  Non-ProgramValue payloads are captured as
+        constants, bound at record time."""
+        if not self._open:
+            raise RuntimeError(f"{self.program_id} is not recording")
+        if comm.cube is not self.cube:
+            raise ValueError(
+                f"communicator {comm.describe()} is bound to a different "
+                f"cube than program {self.program_id}")
+        kwargs = dict(kwargs or {})
+        if isinstance(x, ProgramValue):
+            if x.program is not self:
+                raise ValueError(
+                    f"value of {x.program.program_id} used inside "
+                    f"{self.program_id}")
+            vin = x.vid
+        else:
+            v = self._new_value(_aval_of(x))
+            self._consts[v.vid] = x
+            vin = v.vid
+        out = self._new_value(
+            _result_aval(comm, primitive, self._avals[vin], kwargs))
+        self._ops.append(CommOp(
+            op_id=len(self._ops), primitive=primitive, comm=comm,
+            algorithm=algorithm, op=op, kwargs=kwargs,
+            in_vids=(vin,), out_vids=(out.vid,)))
+        return out
+
+    # ------------------------------------------------------------- lowering
+    def _default_outputs(self) -> tuple[int, ...]:
+        if self._output_vids:
+            return tuple(self._output_vids)
+        consumed = {v for o in self._ops for v in o.in_vids}
+        return tuple(v for o in self._ops for v in o.out_vids
+                     if v not in consumed)
+
+    def lower(self, *, fuse: bool = True, coalesce: bool = True,
+              coalesce_bytes: int = DEFAULT_COALESCE_BYTES,
+              split_all_reduce: str | bool = "cost") -> "LoweredProgram":
+        """Optimize + jointly plan the recorded ops.
+
+        ``split_all_reduce``: ``False`` never rewrites, ``True`` always
+        splits an all_reduce into rs+ag (when the leading axis divides), and
+        ``"cost"`` (default) splits only when the planner's estimate is
+        strictly faster -- on this cost model the flat split ties the fused
+        collective, so "cost" effectively keeps the fused form.
+        """
+        if self._open:
+            raise RuntimeError(
+                f"{self.program_id} is still recording; lower() after the "
+                "with-block closes")
+        ops = [dataclasses.replace(o) for o in self._ops]
+        out_vids = self._default_outputs()
+        if fuse:
+            ops = _fuse_rs_ag(self, ops, out_vids)
+        if split_all_reduce:
+            ops = _split_all_reduce(self, ops, mode=split_all_reduce)
+        if coalesce:
+            ops = _coalesce(self, ops, max_bytes=coalesce_bytes)
+        produced = (set(self._consts) | set(self._input_vids)
+                    | {v for o in ops for v in o.out_vids})
+        lost = [v for v in out_vids if v not in produced]
+        if lost:
+            raise RuntimeError(
+                f"lowering {self.program_id} lost output values {lost} "
+                "(optimization-pass bug)")
+        plan = planner.plan_program(self.cube, [
+            planner.ProgramOpSpec(
+                op_id=o.op_id, primitive=o.primitive, dims=o.comm.dims,
+                payload_bytes=_op_payload_bytes(self, o),
+                deps=_dep_ids(o, ops), algorithm=o.algorithm, op=o.op)
+            for o in ops])
+        order = {oid: i for i, oid in enumerate(plan.order)}
+        ops = sorted(ops, key=lambda o: order[o.op_id])
+        return LoweredProgram(program=self, ops=tuple(ops), plan=plan,
+                              out_vids=out_vids)
+
+    # ------------------------------------------------------------ execution
+    def _lowered_default(self) -> "LoweredProgram":
+        if self._lowered is None:
+            self._lowered = self.lower()
+        return self._lowered
+
+    def execute(self, *inputs):
+        """Lower (with default pipeline) and run; returns the tuple of
+        program outputs (a single value is returned bare)."""
+        return self._lowered_default().execute(*inputs)
+
+    def execute_async(self, *inputs) -> "ProgramExecution":
+        return self._lowered_default().execute_async(*inputs)
+
+    def describe(self) -> str:
+        lines = [f"CommProgram[{self.program_id} on {self.cube.describe()} "
+                 f"ops={len(self._ops)} inputs={len(self._input_vids)}]"]
+        lines += ["  " + o.describe(self) for o in self._ops]
+        return "\n".join(lines)
+
+
+def _op_payload_bytes(program: CommProgram, op: CommOp) -> int:
+    total = 0
+    for v in op.in_vids:
+        aval = program._avals[v]
+        size = int(np.prod(aval.shape)) if aval.shape else 1
+        total += size * np.dtype(aval.dtype).itemsize
+    return total
+
+
+def _dep_ids(op: CommOp, ops: Sequence[CommOp]) -> tuple[int, ...]:
+    producers = {v: o.op_id for o in ops for v in o.out_vids}
+    return tuple(sorted({producers[v] for v in op.in_vids if v in producers}))
+
+
+# ------------------------------------------------------- optimization passes
+def _consumers(ops: Sequence[CommOp]) -> dict[int, list[CommOp]]:
+    by_vid: dict[int, list[CommOp]] = {}
+    for o in ops:
+        for v in o.in_vids:
+            by_vid.setdefault(v, []).append(o)
+    return by_vid
+
+def _next_op_id(ops: Sequence[CommOp], program: CommProgram) -> int:
+    return max([o.op_id for o in ops] + [len(program._ops) - 1]) + 1
+
+
+def _origin_ids(op: CommOp) -> tuple[int, ...]:
+    """The *recorded* op ids behind ``op`` -- the fused_from contract always
+    points at program._ops indices, so a rewrite of a rewrite chains its
+    members' origins rather than the intermediate synthetic id."""
+    return op.fused_from if op.fused_from else (op.op_id,)
+
+
+def _fuse_rs_ag(program: CommProgram, ops: list[CommOp],
+                out_vids: tuple[int, ...]) -> list[CommOp]:
+    """Peephole: reduce_scatter -> all_gather on the same axis and group is
+    one all_reduce (paper Table I algebra: AG(RS(x)) = AR(x))."""
+    changed = True
+    while changed:
+        changed = False
+        cons = _consumers(ops)
+        for a in ops:
+            if a.primitive != "reduce_scatter" or a.coalesced:
+                continue
+            v = a.out_vids[0]
+            if v in out_vids:               # the shard itself is a result
+                continue
+            users = cons.get(v, [])
+            if len(users) != 1:
+                continue
+            b = users[0]
+            if (b.primitive != "all_gather" or b.comm.cube is not a.comm.cube
+                    or b.comm.dims != a.comm.dims
+                    or b.kwargs.get("axis") != a.kwargs.get("axis")):
+                continue
+            alg = a.algorithm if a.algorithm == b.algorithm else "auto"
+            fused = CommOp(
+                op_id=_next_op_id(ops, program), primitive="all_reduce",
+                comm=a.comm, algorithm=alg, op=a.op, kwargs={},
+                in_vids=a.in_vids, out_vids=b.out_vids,
+                fused_from=_origin_ids(a) + _origin_ids(b))
+            i = ops.index(a)
+            ops = [o for o in ops if o is not a and o is not b]
+            ops.insert(i, fused)
+            changed = True
+            break
+    return ops
+
+
+def _split_all_reduce(program: CommProgram, ops: list[CommOp],
+                      *, mode) -> list[CommOp]:
+    """Reverse rewrite: all_reduce -> reduce_scatter + all_gather over the
+    first group-divisible axis, taken when the planner strictly prefers the
+    split (or always, under ``mode=True``).  Ops created by fusion are left
+    alone."""
+    out = []
+    for o in ops:
+        aval = program._avals[o.in_vids[0]]
+        g = o.comm.group_size
+        axis = next((i for i, n in enumerate(aval.shape)
+                     if n >= g and n % g == 0), None)
+        eligible = (o.primitive == "all_reduce" and not o.fused_from
+                    and not o.coalesced and axis is not None)
+        if eligible and mode == "cost":
+            payload = _op_payload_bytes(program, o)
+            ar = planner.estimate(program.cube, "all_reduce", o.comm.dims,
+                                  payload)
+            rs = planner.estimate(program.cube, "reduce_scatter",
+                                  o.comm.dims, payload)
+            ag = planner.estimate(program.cube, "all_gather", o.comm.dims,
+                                  payload / g)
+            eligible = rs.seconds + ag.seconds < ar.seconds
+        if not eligible:
+            out.append(o)
+            continue
+        shard = program._new_value(_result_aval(
+            o.comm, "reduce_scatter", aval, {"axis": axis}))
+        nid = _next_op_id(ops + out, program)
+        out.append(CommOp(
+            op_id=nid, primitive="reduce_scatter", comm=o.comm,
+            algorithm=o.algorithm, op=o.op, kwargs={"axis": axis},
+            in_vids=o.in_vids, out_vids=(shard.vid,),
+            fused_from=_origin_ids(o)))
+        out.append(CommOp(
+            op_id=nid + 1, primitive="all_gather", comm=o.comm,
+            algorithm=o.algorithm, op="add", kwargs={"axis": axis},
+            in_vids=(shard.vid,), out_vids=o.out_vids,
+            fused_from=_origin_ids(o)))
+    return out
+
+
+def _reachable(frm: CommOp, to: CommOp, producers, by_id) -> bool:
+    """True when ``to`` transitively consumes a value produced by ``frm``."""
+    stack, seen = [to], set()
+    while stack:
+        cur = stack.pop()
+        if cur.op_id == frm.op_id:
+            return True
+        if cur.op_id in seen:
+            continue
+        seen.add(cur.op_id)
+        for v in cur.in_vids:
+            p = producers.get(v)
+            if p is not None:
+                stack.append(by_id[p])
+    return False
+
+
+def _coalesce(program: CommProgram, ops: list[CommOp],
+              *, max_bytes: int) -> list[CommOp]:
+    """Flatten independent small same-group all-reduces into one bucketed
+    dispatch per (dims, reducer, dtype, requested algorithm)."""
+    producers = {v: o.op_id for o in ops for v in o.out_vids}
+    by_id = {o.op_id: o for o in ops}
+    buckets: dict[tuple, list[CommOp]] = {}
+    for o in ops:
+        if (o.primitive != "all_reduce" or o.kwargs or o.coalesced
+                or len(o.in_vids) != 1
+                or _op_payload_bytes(program, o) > max_bytes):
+            continue
+        key = (o.comm.dims, o.op, o.algorithm,
+               np.dtype(program._avals[o.in_vids[0]].dtype).str)
+        group = buckets.setdefault(key, [])
+        # only mutually independent ops share a bucket
+        if all(not _reachable(m, o, producers, by_id)
+               and not _reachable(o, m, producers, by_id) for m in group):
+            group.append(o)
+    replaced: dict[int, CommOp] = {}
+    next_id = _next_op_id(ops, program)
+    for group in buckets.values():
+        if len(group) < 2:
+            continue
+        lead = group[0]
+        fused = CommOp(
+            op_id=next_id, primitive="all_reduce",
+            comm=lead.comm, algorithm=lead.algorithm, op=lead.op, kwargs={},
+            in_vids=tuple(v for m in group for v in m.in_vids),
+            out_vids=tuple(v for m in group for v in m.out_vids),
+            fused_from=tuple(i for m in group for i in _origin_ids(m)),
+            coalesced=True)
+        next_id += 1
+        replaced.update({m.op_id: fused for m in group})
+    out, emitted = [], set()
+    for o in ops:
+        r = replaced.get(o.op_id)
+        if r is None:
+            out.append(o)
+        elif r.op_id not in emitted:
+            emitted.add(r.op_id)
+            out.append(r)
+    return out
+
+
+# ------------------------------------------------------------------ execute
+@dataclasses.dataclass
+class LoweredProgram:
+    """Optimized ops in jointly-planned schedule order, plus the plan."""
+    program: CommProgram
+    ops: tuple[CommOp, ...]
+    plan: "planner.ProgramPlan"
+    out_vids: tuple[int, ...]
+
+    def describe(self) -> str:
+        lines = [f"LoweredProgram[{self.program.program_id} "
+                 f"ops={len(self.ops)} est={self.plan.seconds * 1e6:.2f}us "
+                 f"(serial {self.plan.serial_seconds * 1e6:.2f}us)]"]
+        lines += ["  " + o.describe(self.program) for o in self.ops]
+        return "\n".join(lines)
+
+    def _env(self, inputs) -> dict[int, Any]:
+        prog = self.program
+        if len(inputs) != len(prog._input_vids):
+            raise ValueError(
+                f"{prog.program_id} takes {len(prog._input_vids)} inputs, "
+                f"got {len(inputs)}")
+        env = dict(prog._consts)
+        env.update(zip(prog._input_vids, inputs))
+        return env
+
+    def _run_op(self, op: CommOp, env: dict[int, Any]) -> None:
+        import jax.numpy as jnp
+        meta = (self.program.program_id, op.fused_from)
+        with _suspend_recording():
+            if op.coalesced:
+                vals = [env[v] for v in op.in_vids]
+                flat = jnp.concatenate([jnp.ravel(v) for v in vals])
+                red = op.comm._dispatch("all_reduce", flat,
+                                        algorithm=op.algorithm, op=op.op,
+                                        _meta=meta)
+                offset = 0
+                for v, vid in zip(vals, op.out_vids):
+                    n = v.size
+                    env[vid] = red[offset:offset + n].reshape(v.shape)
+                    offset += n
+            else:
+                kwargs = dict(op.kwargs)
+                env[op.out_vids[0]] = op.comm._dispatch(
+                    op.primitive, env[op.in_vids[0]],
+                    algorithm=op.algorithm, op=op.op, _meta=meta, **kwargs)
+
+    def execute(self, *inputs):
+        """Run the optimized schedule; returns the program outputs as a
+        tuple (bare when there is exactly one)."""
+        env = self._env(inputs)
+        for op in self.ops:
+            self._run_op(op, env)
+        outs = tuple(env[v] for v in self.out_vids)
+        return outs[0] if len(outs) == 1 else outs
+
+    def execute_async(self, *inputs) -> "ProgramExecution":
+        """Per-op futures backed by dependency-ordered dispatch: forcing a
+        future runs (and memoizes) exactly its dependency cone, in planned
+        order."""
+        return ProgramExecution(self, self._env(inputs))
+
+
+class CommFuture:
+    """Handle on one scheduled op's result(s)."""
+
+    def __init__(self, execution: "ProgramExecution", op: CommOp):
+        self._execution = execution
+        self.op = op
+
+    def done(self) -> bool:
+        return self.op.op_id in self._execution._done
+
+    def result(self):
+        """Force this op (dispatching its unfinished dependencies first);
+        returns the op's output value (tuple for coalesced ops)."""
+        env = self._execution.force(self.op)
+        outs = tuple(env[v] for v in self.op.out_vids)
+        return outs[0] if len(outs) == 1 else outs
+
+
+class ProgramExecution:
+    """Dependency-ordered lazy run of a lowered program."""
+
+    def __init__(self, lowered: LoweredProgram, env: dict[int, Any]):
+        self.lowered = lowered
+        self._env = env
+        self._done: set[int] = set()
+        self._producer = {v: o for o in lowered.ops for v in o.out_vids}
+        self.futures = [CommFuture(self, o) for o in lowered.ops]
+
+    def force(self, op: CommOp) -> dict[int, Any]:
+        if op.op_id in self._done:
+            return self._env
+        for v in op.in_vids:
+            dep = self._producer.get(v)
+            if dep is not None and dep.op_id not in self._done:
+                self.force(dep)
+        self.lowered._run_op(op, self._env)
+        self._done.add(op.op_id)
+        return self._env
+
+    def outputs(self):
+        """Force every op and return the program outputs."""
+        for f in self.futures:
+            f.result()
+        outs = tuple(self._env[v] for v in self.lowered.out_vids)
+        return outs[0] if len(outs) == 1 else outs
+
+
+__all__ = [
+    "CommFuture", "CommOp", "CommProgram", "LoweredProgram",
+    "ProgramExecution", "ProgramValue", "DEFAULT_COALESCE_BYTES",
+    "active_program",
+]

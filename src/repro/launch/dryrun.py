@@ -6,8 +6,10 @@ MUST set the fake device count before any other import -- jax locks the
 device count on first backend init.
 """
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import json
@@ -99,6 +101,70 @@ def parse_collectives(hlo: str) -> dict:
         bg["count"] += 1
         bg["bytes"] += nbytes
     return out
+
+
+# HLO collective ops each (primitive, executed flow) must leave in the
+# compiled module.  Rooted host primitives map to boundary transfers (no
+# collective op) and are excluded.  The registry bodies are the source of
+# truth: naive/pr emulate the host flow with a full all-gather, im ladders
+# are ppermute chains, the hierarchical/compressed splits are RS + AG.
+_EXPECTED_HLO = {
+    ("all_reduce", "hierarchical"): {"reduce-scatter", "all-gather"},
+    ("all_reduce", "compressed"): {"reduce-scatter", "all-gather"},
+    ("all_reduce", "im"): {"all-reduce"},
+    ("all_reduce", "naive"): {"all-gather"},
+    ("all_reduce", "pr"): {"all-gather"},
+    ("all_reduce", "ring"): {"collective-permute"},
+    ("all_reduce", "tree"): {"collective-permute"},
+    ("reduce_scatter", "im"): {"reduce-scatter"},
+    ("reduce_scatter", "naive"): {"all-gather"},
+    ("reduce_scatter", "pr"): {"all-gather"},
+    ("all_gather", "im"): {"all-gather"},
+    ("all_gather", "cm"): {"all-gather"},
+    ("all_gather", "pr"): {"all-gather"},
+    ("all_gather", "naive"): {"all-reduce"},
+    ("all_to_all", "cm"): {"all-to-all"},
+    ("all_to_all", "im"): {"collective-permute"},
+    ("all_to_all", "naive"): {"all-gather"},
+    ("all_to_all", "pr"): {"all-gather"},
+}
+
+
+def comm_drift(trace_summary: dict, collectives: dict) -> dict:
+    """Cross-check the planner's recorded schedule (``CommTrace.summary()``)
+    against the HLO-parsed ``collectives`` section of the same cell.
+
+    Every (primitive, flow) the communicator dispatched must leave its
+    expected collective ops in the compiled module; an expected op kind that
+    never appears means the runtime executed something other than what the
+    planner recorded (planner/runtime drift).  The byte comparison is
+    informational only -- the HLO additionally contains autodiff-transposed
+    collectives the trace cannot see -- except in one direction: compiled
+    wire traffic *below* half the planned volume flags over-estimation.
+    """
+    expected: set[str] = set()
+    flows = []
+    for key in trace_summary.get("by_flow", {}):
+        primitive, flow = key.split("/", 1)
+        want = _EXPECTED_HLO.get((primitive, flow))
+        if want is None:       # rooted primitives: boundary transfer, no op
+            continue
+        flows.append(key)
+        expected |= want
+    present = {op for op, d in collectives.items() if d.get("count")}
+    missing = sorted(expected - present)
+
+    trace_bytes = (trace_summary.get("ici_bytes", 0.0)
+                   + trace_summary.get("dcn_bytes", 0.0))
+    hlo_bytes = sum(d.get("result_bytes", 0) for d in collectives.values())
+    ratio = (hlo_bytes / trace_bytes) if trace_bytes > 0 else None
+    drift = bool(missing) or (bool(flows) and trace_bytes > 0
+                              and (hlo_bytes == 0
+                                   or (ratio is not None and ratio < 0.5)))
+    return {"drift": drift, "missing_ops": missing,
+            "checked_flows": sorted(flows),
+            "expected_ops": sorted(expected), "hlo_ops": sorted(present),
+            "hlo_over_trace_bytes": ratio}
 
 
 def input_structs(cfg: ModelConfig, topo, shape: dict):
@@ -219,6 +285,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                     "optimal_seconds") if k in cost}
     hlo = compiled.as_text()
     rec["collectives"] = parse_collectives(hlo)
+    rec["planner_drift"] = comm_drift(rec["comm_trace"], rec["collectives"])
     rec["status"] = "ok"
     return rec
 

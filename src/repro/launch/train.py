@@ -40,7 +40,8 @@ def main():
     from repro.models.topology import build_topology
     from repro.optim import adamw
     from repro.runtime.trainer import (
-        Trainer, TrainConfig, make_train_step, input_batch_specs)
+        Trainer, TrainConfig, init_opt_state, make_train_step,
+        input_batch_specs)
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -61,7 +62,7 @@ def main():
                      total_steps=args.steps,
                      adamw=adamw.AdamWConfig(use_8bit=not args.fp32_moments))
     params = init_params(cfg, topo, seed=0)
-    opt = adamw.init_state(params, tc.adamw)
+    opt = init_opt_state(params, cfg, topo, tc)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0

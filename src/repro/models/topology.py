@@ -29,7 +29,6 @@ from repro.models.config import ModelConfig
 @dataclasses.dataclass(frozen=True)
 class Topology:
     cube: Hypercube
-    col: Collectives         # deprecated per-call shim (kept for back-compat)
     dp: tuple[str, ...]      # batch axes, e.g. ("pod", "data")
     fsdp: tuple[str, ...]    # param-shard axes, e.g. ("data",)
     tp: tuple[str, ...]      # attention/FFN tensor-parallel axes
@@ -51,6 +50,21 @@ class Topology:
         if got is None:
             got = self._comms[key] = self.cube.comm(
                 key[1], algorithm=self.comm_algorithm)
+        return got
+
+    def program(self, *, name: str = ""):
+        """Deferred CommProgram recording scope over this topology's cube:
+        inside it, every ``topo.comm(axes)`` primitive appends to the
+        program (multi-communicator mixes record into one schedule)."""
+        return self.cube.program(name=name)
+
+    @property
+    def col(self) -> Collectives:
+        """Deprecated per-call shim, constructed lazily on first access
+        (emits the shim's DeprecationWarning)."""
+        got = self._comms.get("__shim__")
+        if got is None:
+            got = self._comms["__shim__"] = Collectives(self.cube)
         return got
 
     def size(self, axes: tuple[str, ...]) -> int:
@@ -117,7 +131,6 @@ def build_topology(cfg: ModelConfig, mesh, *, global_batch: int = 0,
     cube = Hypercube.build(mesh, dims)
     return Topology(
         cube=cube,
-        col=Collectives(cube),
         dp=(("pod",) if pods > 1 else ()) + ("data",),
         fsdp=("data",),
         tp=tp_axes,
@@ -157,7 +170,6 @@ def build_serve_topology(cfg: ModelConfig, mesh) -> Topology:
     cube = Hypercube.build(mesh, dims)
     return Topology(
         cube=cube,
-        col=Collectives(cube),
         dp=(("pod",) if pods > 1 else ()) + ("data",),
         fsdp=("data",),
         tp=tp_axes,

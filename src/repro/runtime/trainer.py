@@ -47,6 +47,12 @@ class TrainConfig:
     # sync path; on vma-tracking jax the autodiff-inserted psums already ran
     # and the flag is a no-op (make_train_step warns).
     compress_pod_grads: bool = False
+    # Error feedback for the compressed hop: persist each leaf's int8
+    # quantization residual in ``opt_state["ef"]`` and fold it into the next
+    # step's gradient, so the lossy DCN compression's bias does not
+    # accumulate (effective only with compress_pod_grads on the explicit
+    # pre-vma sync path over a DCN-crossing cube -- see use_error_feedback).
+    error_feedback: bool = True
     step_deadline_s: float = 0.0       # 0 = no straggler deadline
 
 
@@ -70,41 +76,130 @@ def _replication_factor(spec, topo: Topology) -> int:
     return repl
 
 
-def sync_replicated_grads(grads, specs, cube, *, compress_pod: bool = False):
+def replication_dims(spec, cube) -> tuple[str, ...]:
+    """Cube axes a leaf with PartitionSpec ``spec`` is replicated over."""
+    present = _spec_axes(spec)
+    return tuple(d for d, n in zip(cube.dim_names, cube.dim_sizes)
+                 if d not in present and n > 1)
+
+
+def sync_replicated_grads(grads, specs, cube, *, compress_pod: bool = False,
+                          ef=None):
     """Insert the gradient all-reduces that vma-aware autodiff
     (check_vma=True on jax 0.5+) derives automatically: each leaf's
     per-shard gradient must be summed over every cube axis its spec does
     not shard (its replication axes), because sharded compute feeding a
     replicated parameter leaves one partial contribution per shard.
 
-    Each reduction dispatches through ``cube.comm(missing)`` with
-    ``algorithm="auto"``, so a pod-crossing gradient sum executes the
-    planner's pick -- the hierarchical §IX-A split -- and is recorded by any
-    active CommTrace.  With ``compress_pod`` the DCN-crossing reductions
-    take the registry's "compressed" int8 flow (§V-C) instead.
+    The per-leaf reductions are recorded into **one deferred CommProgram**
+    (``cube.program()``): lowering coalesces the many small same-group
+    all-reduces into bucketed dispatches and jointly plans the schedule, so
+    a trainer with dozens of replicated leaves issues a handful of
+    collectives instead of one per leaf -- bit-identically, since a psum of
+    concatenated leaves equals the concatenation of per-leaf psums.  Every
+    dispatch still runs ``algorithm="auto"`` through the registry (a
+    pod-crossing gradient sum executes the planner's hierarchical §IX-A
+    pick) and is recorded by any active CommTrace with program provenance.
+
+    With ``compress_pod`` the DCN-crossing reductions take the registry's
+    "compressed" int8 flow (§V-C) instead.  ``ef`` (a dict of
+    flat-leaf-index -> error-feedback buffer, see
+    :func:`init_error_feedback`) additionally threads the compressed hop's
+    quantization error across steps: the leaf gradient is pre-corrected by
+    the stored error and the new residual is returned --
+    ``(synced_grads, new_ef)`` when ``ef`` is given.
 
     No-op when the installed jax tracks varying axes in avals
     (compat.HAS_VMA): there the psums were already inserted by autodiff.
     """
     from repro import compat
     if compat.HAS_VMA:
-        return grads
+        return grads if ef is None else (grads, ef)
     flat, tdef = jax.tree.flatten(grads)
     sflat = tdef.flatten_up_to(specs)
-    out = []
-    for g, s in zip(flat, sflat):
-        present = _spec_axes(s)
-        missing = tuple(d for d, n in zip(cube.dim_names, cube.dim_sizes)
-                        if d not in present and n > 1)
-        if not missing:
-            out.append(g)
-            continue
-        comm = cube.comm(missing)
-        if compress_pod and comm.crosses_dcn:
-            out.append(comm.all_reduce(g, algorithm="compressed"))
-        else:
-            out.append(comm.all_reduce(g))
-    return jax.tree.unflatten(tdef, out)
+    out: list = [None] * len(flat)
+    new_ef = dict(ef) if ef is not None else None
+    deferred: list[tuple[int, object]] = []   # (leaf index, ProgramValue)
+    prog = cube.program(name="grad-sync")
+    with prog:
+        for i, (g, s) in enumerate(zip(flat, sflat)):
+            missing = replication_dims(s, cube)
+            if not missing:
+                out[i] = g
+                continue
+            comm = cube.comm(missing)
+            if compress_pod and comm.crosses_dcn:
+                if new_ef is not None and str(i) in new_ef:
+                    # eager two-output flow: correct by the carried error,
+                    # persist the fresh quantization residual
+                    red, err = comm.all_reduce_with_error(
+                        g.astype(jnp.float32), error=new_ef[str(i)][0])
+                    out[i] = red.astype(g.dtype)
+                    new_ef[str(i)] = err[jnp.newaxis]
+                else:
+                    deferred.append(
+                        (i, comm.all_reduce(g, algorithm="compressed")))
+            else:
+                deferred.append((i, comm.all_reduce(g)))
+        prog.output(*(v for _, v in deferred))
+    if deferred:
+        results = prog.execute()
+        if len(deferred) == 1:
+            results = (results,)
+        for (i, _), r in zip(deferred, results):
+            out[i] = r
+    synced = jax.tree.unflatten(tdef, out)
+    return synced if ef is None else (synced, new_ef)
+
+
+def init_error_feedback(params, specs, cube):
+    """Zero error-feedback buffers for the §V-C compressed gradient hop.
+
+    One buffer per gradient leaf whose replication axes cross DCN: shape
+    ``(n_slow, *leaf.shape)`` sharded ``P(dcn_dims, *leaf_spec)`` -- the
+    quantization error is identical within a pod (it is all-gathered over
+    the ICI group) but differs across pods, so the pod axis must be
+    materialized.  Keyed by flattened leaf index (a string, so the dict is
+    a plain pytree for checkpointing).
+    """
+    flat, tdef = jax.tree.flatten(params)
+    sflat = tdef.flatten_up_to(specs)
+    slow = cube.dcn_dims
+    n_slow = int(np.prod([cube.size(d) for d in slow])) if slow else 1
+    out = {}
+    for i, (p, s) in enumerate(zip(flat, sflat)):
+        missing = replication_dims(s, cube)
+        if missing and any(d in cube.dcn_dims for d in missing):
+            buf = jnp.zeros((n_slow,) + tuple(p.shape), jnp.float32)
+            out[str(i)] = jax.device_put(
+                buf, cube.sharding(P(slow, *tuple(s))))
+    return out
+
+
+def error_feedback_specs(cfg, topo, tc: "TrainConfig"):
+    """PartitionSpecs matching :func:`init_error_feedback` (for shard_map
+    in/out specs and dry-run structs)."""
+    defs = param_defs(cfg, topo)
+    flat, tdef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    specs = param_specs(cfg, topo)
+    sflat = tdef.flatten_up_to(specs)
+    cube = topo.cube
+    out = {}
+    for i, (d, s) in enumerate(zip(flat, sflat)):
+        missing = replication_dims(s, cube)
+        if missing and any(x in cube.dcn_dims for x in missing):
+            out[str(i)] = P(cube.dcn_dims, *tuple(s))
+    return out
+
+
+def use_error_feedback(tc: "TrainConfig", cube) -> bool:
+    """Whether this run threads an error-feedback buffer through opt_state:
+    compressed pod gradients requested, the explicit (pre-vma) sync path is
+    active, and the cube actually crosses DCN."""
+    from repro import compat
+    return bool(tc.compress_pod_grads and tc.error_feedback
+                and not compat.HAS_VMA and cube.dcn_dims)
 
 
 def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
@@ -121,6 +216,8 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
             "reductions are inserted by autodiff before the trainer can "
             "route them through the compressed collective")
 
+    with_ef = use_error_feedback(tc, topo.cube)
+
     def step_shard(params, opt_state, batch):
         # Gradient reductions are inserted by shard_map's vma-aware autodiff
         # (check_vma=True): the FSDP AllGather transposes to a ReduceScatter
@@ -130,10 +227,16 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
         # the sharding structure.
         (loss, metrics), grads = jax.value_and_grad(
             model.loss_shard, has_aux=True)(params, batch)
-        # pre-vma jax: restore the replicated-leaf all-reduces by hand,
-        # planner-dispatched (hierarchical across pods; int8 when enabled)
-        grads = sync_replicated_grads(grads, specs, topo.cube,
-                                      compress_pod=tc.compress_pod_grads)
+        # pre-vma jax: restore the replicated-leaf all-reduces by hand --
+        # recorded as one coalesced CommProgram, planner-dispatched
+        # (hierarchical across pods; int8 + error feedback when enabled)
+        if with_ef:
+            grads, new_ef = sync_replicated_grads(
+                grads, specs, topo.cube, compress_pod=True,
+                ef=opt_state["ef"])
+        else:
+            grads = sync_replicated_grads(grads, specs, topo.cube,
+                                          compress_pod=tc.compress_pod_grads)
 
         # global-norm clip (replication-aware: local sum-of-squares divided
         # by each leaf's replication degree, then summed over the full cube)
@@ -151,6 +254,8 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
         lr = lr_fn(opt_state["step"])
         params, opt_state = adamw.update(params, opt_state, grads,
                                          lr=lr, cfg=tc.adamw)
+        if with_ef:
+            opt_state["ef"] = new_ef
         metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
         return params, opt_state, metrics
 
@@ -167,15 +272,28 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
     return jax.jit(fn, donate_argnums=(0, 1))
 
 
+def init_opt_state(params, cfg, topo, tc: TrainConfig):
+    """Optimizer state for :func:`make_train_step`: AdamW moments plus the
+    compressed-hop error-feedback buffers when this run threads them."""
+    state = adamw.init_state(params, tc.adamw)
+    if use_error_feedback(tc, topo.cube):
+        state["ef"] = init_error_feedback(
+            params, param_specs(cfg, topo), topo.cube)
+    return state
+
+
 def _opt_specs(cfg, topo, tc: TrainConfig):
     defs = param_defs(cfg, topo)
     sd = adamw.state_defs(defs, tc.adamw,
                           is_leaf=lambda x: isinstance(x, ParamDef),
                           cube=topo.cube)
-    return jax.tree.map(
+    specs = jax.tree.map(
         lambda d: d[1], sd,
         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
         and not isinstance(x[0], dict))
+    if use_error_feedback(tc, topo.cube):
+        specs["ef"] = error_feedback_specs(cfg, topo, tc)
+    return specs
 
 
 def opt_structs(cfg, topo, tc: TrainConfig):
@@ -183,11 +301,23 @@ def opt_structs(cfg, topo, tc: TrainConfig):
     sd = adamw.state_defs(defs, tc.adamw,
                           is_leaf=lambda x: isinstance(x, ParamDef),
                           cube=topo.cube)
-    return jax.tree.map(
+    structs = jax.tree.map(
         lambda d: jax.ShapeDtypeStruct(d[0], d[2],
                                        sharding=topo.cube.sharding(d[1])),
         sd, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
         and not isinstance(x[0], dict))
+    if use_error_feedback(tc, topo.cube):
+        cube = topo.cube
+        n_slow = int(np.prod([cube.size(d) for d in cube.dcn_dims]))
+        flat, tdef = jax.tree.flatten(
+            param_defs(cfg, topo), is_leaf=lambda x: isinstance(x, ParamDef))
+        shapes = {str(i): (n_slow,) + tuple(d.shape)
+                  for i, d in enumerate(flat)}
+        structs["ef"] = {
+            k: jax.ShapeDtypeStruct(shapes[k], jnp.float32,
+                                    sharding=topo.cube.sharding(spec))
+            for k, spec in error_feedback_specs(cfg, topo, tc).items()}
+    return structs
 
 
 def input_batch_specs(cfg: ModelConfig, topo: Topology):

@@ -20,9 +20,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.hypercube import Hypercube
-from repro.core.collectives import (
-    Collectives, ring_all_reduce, tree_all_reduce, APPLICABILITY)
+from repro.core.collectives import ring_all_reduce, tree_all_reduce
+from repro.core.comm import applicability
 from repro.launch.mesh import make_mesh
+
+APPLICABILITY = applicability()
 
 
 def smap(cube, f, in_specs, out_specs):
@@ -37,41 +39,51 @@ def check(name, got, want, atol=1e-5):
     print(f"ok: {name}")
 
 
-def run_single_dim(cube, col, dim, g):
+def run_single_dim(cube, dim, g):
+    comm = cube.comm(dim, algorithm="pidcomm")
     rng = np.random.RandomState(0)
     n = 4 * g
     x = rng.randn(g, n).astype(np.float32)
 
     for alg in APPLICABILITY["all_reduce"] + ("pidcomm",):
-        f = smap(cube, lambda v: col.all_reduce(v, dim, algorithm=alg),
+        f = smap(cube, lambda v: comm.all_reduce(v, algorithm=alg),
                  P(dim, None), P(None, None))
         check(f"AR[{dim},{alg}]", f(x)[0], x.sum(0))
 
     for alg in APPLICABILITY["reduce_scatter"] + ("pidcomm",):
-        f = smap(cube, lambda v: col.reduce_scatter(v, dim, axis=1, algorithm=alg),
+        f = smap(cube, lambda v: comm.reduce_scatter(v, axis=1, algorithm=alg),
                  P(dim, None), P(dim, None))
         check(f"RS[{dim},{alg}]", f(x), x.sum(0).reshape(g, -1))
 
     for alg in APPLICABILITY["all_gather"] + ("pidcomm",):
-        f = smap(cube, lambda v: col.all_gather(v, dim, axis=0, algorithm=alg),
+        f = smap(cube, lambda v: comm.all_gather(v, axis=0, algorithm=alg),
                  P(dim, None), P(None, None))
         check(f"AG[{dim},{alg}]", f(x), x)
 
     b = n // g
     want_aa = x.reshape(g, g, b).transpose(1, 0, 2).reshape(g, n)
     for alg in APPLICABILITY["all_to_all"] + ("pidcomm",):
-        f = smap(cube, lambda v: col.all_to_all(v, dim, split_axis=1,
-                                                concat_axis=1, algorithm=alg),
+        f = smap(cube, lambda v: comm.all_to_all(v, split_axis=1,
+                                                 concat_axis=1, algorithm=alg),
                  P(dim, None), P(dim, None))
         check(f"AA[{dim},{alg}]", f(x), want_aa)
 
     # non-add reductions
-    f = smap(cube, lambda v: col.all_reduce(v, dim, op="max"),
+    f = smap(cube, lambda v: comm.all_reduce(v, op="max"),
              P(dim, None), P(None, None))
     check(f"AR-max[{dim}]", f(x)[0], x.max(0))
-    f = smap(cube, lambda v: col.reduce_scatter(v, dim, axis=1, op="min"),
+    f = smap(cube, lambda v: comm.reduce_scatter(v, axis=1, op="min"),
              P(dim, None), P(dim, None))
     check(f"RS-min[{dim}]", f(x), x.min(0).reshape(g, -1))
+
+    # single-op deferred programs execute the identical registry bodies
+    import jax as _jax
+    prog = cube.program(name="md-oneop")
+    with prog:
+        a = prog.input(_jax.ShapeDtypeStruct((1, n), jnp.float32))
+        prog.output(comm.all_reduce(a))
+    f = smap(cube, lambda v: prog.execute(v), P(dim, None), P(None, None))
+    check(f"AR[{dim}] via one-op program", f(x)[0], x.sum(0))
 
     # topology comparators (payload is the per-shard row)
     f = smap(cube, lambda v: ring_all_reduce(v[0], cube, dim)[None],
@@ -82,17 +94,19 @@ def run_single_dim(cube, col, dim, g):
     check(f"tree-AR[{dim}]", f(x)[0], x.sum(0))
 
 
-def run_multi_instance(cube, col):
+def run_multi_instance(cube):
     # 2x2x2 cube; collective over the middle dim only -> 4 instances.
     rng = np.random.RandomState(1)
     x = rng.randn(2, 2, 2, 6).astype(np.float32)  # (a, b, c, n)
 
-    f = smap(cube, lambda v: col.all_reduce(v, "010"),
+    f = smap(cube, lambda v: cube.comm("010", algorithm="pidcomm")
+             .all_reduce(v),
              P("a", "b", "c", None), P("a", None, "c", None))
     check("AR[b bitmap 010] multi-instance", f(x)[:, 0], x.sum(1))
 
     # tuple-dim group over (a, c): 2 instances of size 4.
-    f = smap(cube, lambda v: col.all_reduce(v, ("a", "c")),
+    f = smap(cube, lambda v: cube.comm(("a", "c"), algorithm="pidcomm")
+             .all_reduce(v),
              P("a", "b", "c", None), P(None, "b", None, None))
     check("AR[(a,c)] tuple", f(x)[0, :, 0], x.sum(axis=(0, 2)))
 
@@ -100,26 +114,28 @@ def run_multi_instance(cube, col):
     g = 4
     y = rng.randn(2, g, g * 3).astype(np.float32)  # (a, bc, n)
     want = y.reshape(2, g, g, 3).transpose(0, 2, 1, 3).reshape(2, g, g * 3)
-    f = smap(cube, lambda v: col.all_to_all(v, ("b", "c"), split_axis=2,
-                                            concat_axis=2),
+    f = smap(cube, lambda v: cube.comm(("b", "c"), algorithm="pidcomm")
+             .all_to_all(v, split_axis=2, concat_axis=2),
              P("a", ("b", "c"), None), P("a", ("b", "c"), None))
     got = f(y.reshape(2, g, g * 3))
     check("AA[(b,c)] tuple", got, want)
 
     # hierarchical AR path: treat 'a' as DCN by building a pod-mesh cube.
-    f = smap(cube, lambda v: col.all_reduce(v, ("a", "b"), algorithm="im"),
+    f = smap(cube, lambda v: cube.comm(("a", "b")).all_reduce(
+        v, algorithm="im"),
              P("a", "b", "c", None), P(None, None, "c", None))
     check("AR[(a,b)] im", f(x)[0, 0], x.sum(axis=(0, 1)))
 
 
-def run_rooted(cube, col):
+def run_rooted(cube):
+    comm = cube.comm(("a", "b", "c"), algorithm="pidcomm")
     rng = np.random.RandomState(2)
     host = rng.randn(8, 5).astype(np.float32)
-    dev = col.scatter(host, ("a", "b", "c"), axis=0)
-    check("scatter/gather roundtrip", col.gather(dev), host)
-    rep = col.broadcast(host)
+    dev = comm.scatter(host, axis=0)
+    check("scatter/gather roundtrip", comm.gather(dev), host)
+    rep = comm.broadcast(host)
     check("broadcast", np.asarray(rep), host)
-    check("reduce", col.reduce(dev, op="add"), host.sum(0))
+    check("reduce", comm.reduce(dev, op="add"), host.sum(0))
 
 
 def run_dcn_hierarchy():
@@ -127,15 +143,15 @@ def run_dcn_hierarchy():
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cube = Hypercube.build(mesh, {"pod": 2, "dp": 2, "tp": 2})
     assert cube.dcn_dims == ("pod",), cube.dcn_dims
-    col = Collectives(cube)
+    comm = cube.comm(("pod", "dp"), algorithm="pidcomm")
     rng = np.random.RandomState(3)
     x = rng.randn(4, 8).astype(np.float32)  # sharded over (pod, dp)
-    f = smap(cube, lambda v: col.all_reduce(v, ("pod", "dp")),
+    f = smap(cube, lambda v: comm.all_reduce(v),
              P(("pod", "dp"), None), P(None, None))
     check("hierarchical AR over DCN+ICI", f(x)[0], x.sum(0))
 
     hlo = jax.jit(shard_map(
-        lambda v: col.all_reduce(v, ("pod", "dp")), mesh=cube.mesh,
+        lambda v: comm.all_reduce(v), mesh=cube.mesh,
         in_specs=P(("pod", "dp"), None),
         out_specs=P(None, None), check_vma=False)).lower(
             jax.ShapeDtypeStruct((4, 8), jnp.float32)).as_text()
@@ -169,13 +185,12 @@ def run_compressed_ar():
 def main():
     mesh = make_mesh((2, 2, 2), ("a", "b", "c"))
     cube8 = Hypercube.build(mesh, {"a": 2, "b": 2, "c": 2})
-    col = Collectives(cube8)
-    run_multi_instance(cube8, col)
-    run_rooted(cube8, col)
+    run_multi_instance(cube8)
+    run_rooted(cube8)
 
     mesh1d = make_mesh((8,), ("d",))
     cube1d = Hypercube.build(mesh1d, {"d": 8})
-    run_single_dim(cube1d, Collectives(cube1d), "d", 8)
+    run_single_dim(cube1d, "d", 8)
 
     run_dcn_hierarchy()
     run_compressed_ar()

@@ -1,5 +1,6 @@
 """Multi-device numeric oracles, run in subprocesses so the fake device
-count never leaks into this pytest process (which stays single-device)."""
+count never leaks into this pytest process (which stays single-device),
+plus the deprecation contract of the legacy ``Collectives`` shim."""
 import os
 import subprocess
 import sys
@@ -7,6 +8,29 @@ import sys
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_collectives_shim_warns_on_construction():
+    """The per-call shim is deprecated: constructing it must emit a
+    DeprecationWarning pointing at the communicator API (the differential
+    cells themselves now run through ``cube.comm`` -- see test_conformance
+    and the shim-equivalence test in test_comm)."""
+    from repro.core.collectives import Collectives
+    from repro.testing import substrate
+    cube = substrate.fake_cube((8,), ("d",), {"d": 8})
+    with pytest.warns(DeprecationWarning, match="cube.comm"):
+        Collectives(cube)
+    # the topology handle constructs the shim lazily: first .col access
+    # warns, plain topology construction stays silent
+    import warnings
+    from repro.models.topology import Topology
+    topo = Topology(cube=cube, dp=("d",), fsdp=("d",), tp=(), cp=(),
+                    ep=(), etp=())
+    with pytest.warns(DeprecationWarning, match="cube.comm"):
+        topo.col
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        topo.col  # cached: no second warning
 
 
 def _run(script, timeout=1800):

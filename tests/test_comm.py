@@ -253,7 +253,8 @@ def test_shim_equals_communicator(cube_name, bitmap, primitive, stage,
     cube = request.getfixturevalue(cube_name)
     names = cube.dims_from_bitmap(bitmap)
     idx = tuple(cube.dim_names.index(d) for d in names)
-    col = Collectives(cube)
+    with pytest.warns(DeprecationWarning, match="cube.comm"):
+        col = Collectives(cube)
     comm = cube.comm(bitmap)
     nd = len(cube.dim_sizes)
     g = cube.group_size(names)

@@ -21,8 +21,10 @@ import numpy as np
 import pytest
 
 from repro.core import comm as C
-from repro.core.collectives import APPLICABILITY, Collectives, resolve_stage
+from repro.core.comm import applicability, resolve_stage
 from repro.testing import oracles, substrate
+
+APPLICABILITY = applicability()
 
 # (cube fixture name, bitmap) cells. ring8 is the flat 8-wide group; the
 # 2x4 rectangle's "01" selects the 4-wide dim (2 instances); the 2x2x2
@@ -57,11 +59,11 @@ def _cells(primitive):
 def test_all_reduce_conformance(cube_name, bitmap, stage, request):
     cube = request.getfixturevalue(cube_name)
     names, idx = _sel(cube, bitmap)
-    col = Collectives(cube)
+    comm = cube.comm(names)
     nd = len(cube.dim_sizes)
     x = substrate.integer_payload(cube, (3, 5), seed=nd)
     got = substrate.run_per_shard(
-        cube, lambda v: col.all_reduce(v, names, algorithm=stage), x)
+        cube, lambda v: comm.all_reduce(v, algorithm=stage), x)
     want = oracles.all_reduce(x, nd, idx)
     np.testing.assert_array_equal(got, want)  # bit-identical, fp32 exact
 
@@ -71,14 +73,14 @@ def test_all_reduce_conformance(cube_name, bitmap, stage, request):
 def test_reduce_scatter_conformance(cube_name, bitmap, stage, op, request):
     cube = request.getfixturevalue(cube_name)
     names, idx = _sel(cube, bitmap)
-    col = Collectives(cube)
+    comm = cube.comm(names)
     nd = len(cube.dim_sizes)
     g = cube.group_size(names)
     x = substrate.integer_payload(cube, (2, 8 * g), seed=g)
     got = substrate.run_per_shard(
         cube,
-        lambda v: col.reduce_scatter(v, names, axis=nd + 1, op=op,
-                                     algorithm=stage),
+        lambda v: comm.reduce_scatter(v, axis=nd + 1, op=op,
+                                      algorithm=stage),
         x)
     want = oracles.reduce_scatter(x, nd, idx, axis=1, op=op)
     np.testing.assert_array_equal(got, want)
@@ -88,13 +90,13 @@ def test_reduce_scatter_conformance(cube_name, bitmap, stage, op, request):
 def test_all_gather_conformance(cube_name, bitmap, stage, request):
     cube = request.getfixturevalue(cube_name)
     names, idx = _sel(cube, bitmap)
-    col = Collectives(cube)
+    comm = cube.comm(names)
     nd = len(cube.dim_sizes)
     rng = np.random.RandomState(7)
     shape = tuple(cube.dim_sizes) + (3, 4)
     x = rng.randn(*shape).astype(np.float32)  # pure movement: any values
     got = substrate.run_per_shard(
-        cube, lambda v: col.all_gather(v, names, axis=nd, algorithm=stage),
+        cube, lambda v: comm.all_gather(v, axis=nd, algorithm=stage),
         x)
     want = oracles.all_gather(x, nd, idx, axis=0)
     np.testing.assert_array_equal(got, want)
@@ -104,7 +106,7 @@ def test_all_gather_conformance(cube_name, bitmap, stage, request):
 def test_all_to_all_conformance(cube_name, bitmap, stage, request):
     cube = request.getfixturevalue(cube_name)
     names, idx = _sel(cube, bitmap)
-    col = Collectives(cube)
+    comm = cube.comm(names)
     nd = len(cube.dim_sizes)
     g = cube.group_size(names)
     rng = np.random.RandomState(g)
@@ -112,8 +114,8 @@ def test_all_to_all_conformance(cube_name, bitmap, stage, request):
     x = rng.randn(*shape).astype(np.float32)
     got = substrate.run_per_shard(
         cube,
-        lambda v: col.all_to_all(v, names, split_axis=nd + 1,
-                                 concat_axis=nd + 1, algorithm=stage),
+        lambda v: comm.all_to_all(v, split_axis=nd + 1,
+                                  concat_axis=nd + 1, algorithm=stage),
         x)
     want = oracles.all_to_all(x, nd, idx, split_axis=1, concat_axis=1)
     np.testing.assert_array_equal(got, want)
@@ -122,11 +124,11 @@ def test_all_to_all_conformance(cube_name, bitmap, stage, request):
 @pytest.mark.parametrize("op", ["max", "min"])
 @pytest.mark.parametrize("stage", _stages("all_reduce"))
 def test_all_reduce_nonadd_ops(cube_ring8, op, stage):
-    col = Collectives(cube_ring8)
+    comm = cube_ring8.comm("d")
     x = substrate.integer_payload(cube_ring8, (6,), seed=11)
     got = substrate.run_per_shard(
         cube_ring8,
-        lambda v: col.all_reduce(v, "d", op=op, algorithm=stage), x)
+        lambda v: comm.all_reduce(v, op=op, algorithm=stage), x)
     np.testing.assert_array_equal(got, oracles.all_reduce(x, 1, (0,), op=op))
 
 
@@ -135,16 +137,16 @@ def test_dtype_sweep(cube_ring8, dtype):
     """pidcomm all_reduce + all_to_all across payload dtypes."""
     import jax.numpy as jnp
     dt = jnp.bfloat16 if dtype == "bfloat16" else dtype
-    col = Collectives(cube_ring8)
+    comm = cube_ring8.comm("d", algorithm="pidcomm")
     x = substrate.integer_payload(cube_ring8, (16,), seed=3).astype(dt)
     got = substrate.run_per_shard(
-        cube_ring8, lambda v: col.all_reduce(v, "d"), x)
+        cube_ring8, lambda v: comm.all_reduce(v), x)
     np.testing.assert_array_equal(
         np.asarray(got, np.float64),
         oracles.all_reduce(np.asarray(x, np.float64), 1, (0,)))
     got = substrate.run_per_shard(
         cube_ring8,
-        lambda v: col.all_to_all(v, "d", split_axis=1, concat_axis=1), x)
+        lambda v: comm.all_to_all(v, split_axis=1, concat_axis=1), x)
     np.testing.assert_array_equal(
         np.asarray(got, np.float64),
         oracles.all_to_all(np.asarray(x, np.float64), 1, (0,),
@@ -156,13 +158,13 @@ def test_ladder_max_fallthrough(cube_ring8, monkeypatch):
     """im all_to_all beyond _LADDER_MAX falls through to the fused cm
     collective and must still match the oracle."""
     monkeypatch.setattr(C, "_LADDER_MAX", 2)  # 8 > 2: forces the cm branch
-    col = Collectives(cube_ring8)
+    comm = cube_ring8.comm("d")
     rng = np.random.RandomState(0)
     x = rng.randn(8, 2, 16).astype(np.float32)
     got = substrate.run_per_shard(
         cube_ring8,
-        lambda v: col.all_to_all(v, "d", split_axis=2, concat_axis=2,
-                                 algorithm="im"), x)
+        lambda v: comm.all_to_all(v, split_axis=2, concat_axis=2,
+                                  algorithm="im"), x)
     want = oracles.all_to_all(x, 1, (0,), split_axis=1, concat_axis=1)
     np.testing.assert_array_equal(got, want)
 
@@ -187,9 +189,9 @@ def test_hierarchical_all_reduce_dcn(cube_pod):
     """Pod-crossing im all_reduce: oracle agreement plus the §IX-A schedule
     (ICI reduce-scatter + DCN all-reduce + ICI all-gather) in the HLO."""
     assert cube_pod.dcn_dims == ("pod",)
-    col = Collectives(cube_pod)
+    comm = cube_pod.comm(("pod", "dp"))
     x = substrate.integer_payload(cube_pod, (5,), seed=9)
-    fn = lambda v: col.all_reduce(v, ("pod", "dp"), algorithm="im")
+    fn = lambda v: comm.all_reduce(v, algorithm="im")
     got = substrate.run_per_shard(cube_pod, fn, x)
     want = oracles.all_reduce(x, 3, (0, 1))
     np.testing.assert_array_equal(got, want)
@@ -202,10 +204,10 @@ def test_hierarchical_all_reduce_dcn(cube_pod):
 def test_pod_crossing_stage_sweep(cube_pod, stage):
     """Every all_reduce stage agrees on the DCN-crossing "110" group."""
     names, idx = _sel(cube_pod, "110")
-    col = Collectives(cube_pod)
+    comm = cube_pod.comm(names)
     x = substrate.integer_payload(cube_pod, (4,), seed=13)
     got = substrate.run_per_shard(
-        cube_pod, lambda v: col.all_reduce(v, names, algorithm=stage), x)
+        cube_pod, lambda v: comm.all_reduce(v, algorithm=stage), x)
     np.testing.assert_array_equal(got, oracles.all_reduce(x, 3, idx))
 
 
@@ -214,11 +216,11 @@ def test_pod_crossing_stage_sweep(cube_pod, stage):
 @pytest.mark.parametrize("bitmap", ["111", "010"])
 def test_scatter_conformance(cube_2x2x2, bitmap, stage):
     names, idx = _sel(cube_2x2x2, bitmap)
-    col = Collectives(cube_2x2x2)
+    comm = cube_2x2x2.comm(names)
     g = cube_2x2x2.group_size(names)
     rng = np.random.RandomState(5)
     host = rng.randn(4 * g, 3).astype(np.float32)
-    dev = col.scatter(host, names, axis=0, algorithm=stage)
+    dev = comm.scatter(host, axis=0, algorithm=stage)
     got = substrate.local_blocks(cube_2x2x2, dev)
     want = oracles.scatter(host, cube_2x2x2.dim_sizes, idx, axis=0)
     np.testing.assert_array_equal(got, want)
@@ -227,11 +229,11 @@ def test_scatter_conformance(cube_2x2x2, bitmap, stage):
 @pytest.mark.parametrize("stage", _stages("gather"))
 def test_gather_conformance(cube_2x2x2, stage):
     names, idx = _sel(cube_2x2x2, "111")
-    col = Collectives(cube_2x2x2)
+    comm = cube_2x2x2.comm(names, algorithm="pidcomm")
     rng = np.random.RandomState(6)
     host = rng.randn(16, 3).astype(np.float32)
-    dev = col.scatter(host, names, axis=0)
-    back = col.gather(dev, algorithm=stage)
+    dev = comm.scatter(host, axis=0)
+    back = comm.gather(dev, algorithm=stage)
     np.testing.assert_array_equal(np.asarray(back), host)
     # the oracle reassembly from per-PE blocks agrees too
     blocks = substrate.local_blocks(cube_2x2x2, dev)
@@ -242,21 +244,21 @@ def test_gather_conformance(cube_2x2x2, stage):
 @pytest.mark.parametrize("op", ["add", "max", "min"])
 @pytest.mark.parametrize("stage", _stages("reduce"))
 def test_reduce_conformance(cube_2x2x2, op, stage):
-    col = Collectives(cube_2x2x2)
+    comm = cube_2x2x2.comm(("a", "b", "c"), algorithm="pidcomm")
     host = substrate.integer_payload(cube_2x2x2, (), seed=8).reshape(8, 1)
     host = np.concatenate([host] * 4, axis=1).astype(np.float32)
-    dev = col.scatter(host, ("a", "b", "c"), axis=0)
-    got = col.reduce(dev, op=op, axis=0, algorithm=stage)
+    dev = comm.scatter(host, axis=0)
+    got = comm.reduce(dev, op=op, axis=0, algorithm=stage)
     np.testing.assert_array_equal(np.asarray(got),
                                   oracles.reduce(host, axis=0, op=op))
 
 
 @pytest.mark.parametrize("stage", _stages("broadcast"))
 def test_broadcast_conformance(cube_2x2x2, stage):
-    col = Collectives(cube_2x2x2)
+    comm = cube_2x2x2.comm(("a", "b", "c"))
     rng = np.random.RandomState(9)
     host = rng.randn(6, 2).astype(np.float32)
-    dev = col.broadcast(host, algorithm=stage)
+    dev = comm.broadcast(host, algorithm=stage)
     got = substrate.local_blocks(cube_2x2x2, dev)
     want = oracles.broadcast(host, cube_2x2x2.dim_sizes)
     np.testing.assert_array_equal(got, want)

@@ -1,0 +1,75 @@
+"""Dry-run analysis utilities: the planner/runtime drift cross-check
+(ROADMAP open item) -- the recorded ``comm_trace`` of a cell must agree
+with the HLO-parsed ``collectives`` section of the same compiled module."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import comm_drift, parse_collectives
+
+
+def _summary(by_flow, ici=1e6, dcn=0.0):
+    return {"events": len(by_flow), "ici_bytes": ici, "dcn_bytes": dcn,
+            "by_flow": {k: {"count": 1} for k in by_flow}}
+
+
+def test_comm_drift_clean_cell():
+    """Planned hierarchical all-reduce + FSDP all-gather, and the compiled
+    module contains reduce-scatter/all-gather/all-reduce: no drift."""
+    summary = _summary(["all_reduce/hierarchical", "all_gather/im"],
+                       ici=1e6, dcn=1e5)
+    collectives = {"reduce-scatter": {"count": 2, "result_bytes": 500_000},
+                   "all-gather": {"count": 4, "result_bytes": 900_000},
+                   "all-reduce": {"count": 1, "result_bytes": 200_000}}
+    rep = comm_drift(summary, collectives)
+    assert not rep["drift"]
+    assert rep["missing_ops"] == []
+    assert rep["hlo_over_trace_bytes"] == pytest.approx(1.6 / 1.1, rel=1e-6)
+
+
+def test_comm_drift_flags_missing_schedule():
+    """The planner recorded the hierarchical split but the compiled module
+    only has a flat all-reduce: the reduce-scatter/all-gather hops are
+    missing -> drift."""
+    summary = _summary(["all_reduce/hierarchical"], ici=1e6, dcn=1e5)
+    collectives = {"all-reduce": {"count": 1, "result_bytes": 1_100_000}}
+    rep = comm_drift(summary, collectives)
+    assert rep["drift"]
+    assert rep["missing_ops"] == ["all-gather", "reduce-scatter"]
+
+
+def test_comm_drift_flags_empty_hlo_and_underrun():
+    """Traced communication with zero compiled collectives (or well under
+    the planned volume) is drift; rooted-only traces are exempt."""
+    rep = comm_drift(_summary(["all_reduce/im"]), {})
+    assert rep["drift"] and rep["hlo_over_trace_bytes"] == 0.0
+    # compiled wire bytes far below plan -> over-estimation drift
+    rep = comm_drift(_summary(["all_reduce/im"], ici=1e6),
+                     {"all-reduce": {"count": 1, "result_bytes": 1000}})
+    assert rep["drift"] and rep["hlo_over_trace_bytes"] < 0.5
+    # rooted primitives leave no collective ops: nothing to check
+    rep = comm_drift(_summary(["scatter/im", "gather/im"]), {})
+    assert not rep["drift"] and rep["checked_flows"] == []
+
+
+def test_comm_drift_on_live_lowering(cube_pod):
+    """End-to-end: trace + compile a pod-crossing all-reduce on the 8-device
+    substrate and run the cross-check on the real HLO."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.comm import CommTrace
+
+    comm = cube_pod.comm(("pod", "dp"))
+    spec = P(*cube_pod.dim_names, None)
+    with CommTrace() as trace:
+        compiled = jax.jit(shard_map(
+            lambda v: comm.all_reduce(v), mesh=cube_pod.mesh,
+            in_specs=spec, out_specs=spec, check_vma=False)).lower(
+                jax.ShapeDtypeStruct((2, 2, 2, 4096), jnp.float32)).compile()
+    summary = trace.summary()
+    assert "all_reduce/hierarchical" in summary["by_flow"]
+    collectives = parse_collectives(compiled.as_text())
+    rep = comm_drift(summary, collectives)
+    assert rep["missing_ops"] == []
+    assert not rep["drift"]
