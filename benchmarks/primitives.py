@@ -12,6 +12,20 @@ import numpy as np
 
 from benchmarks._timing import bench, emit
 
+# Bench-trajectory rows (one per measured primitive cell); harvested by
+# ``benchmarks/run.py`` into BENCH_primitives.json at the repo root.  Schema
+# per row: primitive, flow, stage, nbytes, measured_us, est_us, est_source.
+ROWS: list[dict] = []
+
+
+def _record_row(primitive: str, ev, us: float) -> None:
+    if ev is None:
+        return
+    ROWS.append({
+        "primitive": primitive, "flow": ev.flow, "stage": ev.stage,
+        "nbytes": ev.payload_bytes, "measured_us": round(us, 2),
+        "est_us": round(ev.seconds * 1e6, 3), "est_source": ev.est_source})
+
 
 def _setup(shape, names):
     from repro.core.hypercube import Hypercube
@@ -78,20 +92,27 @@ def fig14_fig16_primitives(size_kb: int = 512):
                 est_us = ev.seconds * 1e6
                 derived += (f";flow={ev.flow};stage={ev.stage}"
                             f";est_us={est_us:.1f}"
-                            f";meas_over_est={us / est_us:.1f}")
+                            f";meas_over_est={us / est_us:.1f}"
+                            f";est_source={ev.est_source}")
+            _record_row(prim, ev, us)
             emit(f"fig14_16/{prim}/{alg}", us, derived)
 
     # rooted primitives (host <-> PE path, jit-boundary timing)
     import jax
     host = np.ones((g, n), np.float32)
     dev = comm.scatter(host, axis=0)
-    emit("fig14/scatter/pidcomm",
-         bench(lambda: jax.block_until_ready(
-             comm.scatter(host, axis=0))), "")
-    emit("fig14/gather/pidcomm", bench(lambda: comm.gather(dev)), "")
-    emit("fig14/broadcast/pidcomm",
-         bench(lambda: jax.block_until_ready(comm.broadcast(host))), "")
-    emit("fig14/reduce/pidcomm", bench(lambda: comm.reduce(dev)), "")
+    rooted = {
+        "scatter": lambda: jax.block_until_ready(comm.scatter(host, axis=0)),
+        "gather": lambda: comm.gather(dev),
+        "broadcast": lambda: jax.block_until_ready(comm.broadcast(host)),
+        "reduce": lambda: comm.reduce(dev),
+    }
+    for prim, call in rooted.items():
+        with CommTrace() as tr:
+            us = bench(call)
+        ev = next((e for e in tr.events if e.primitive == prim), None)
+        _record_row(prim, ev, us)
+        emit(f"fig14/{prim}/pidcomm", us, "")
 
 
 def fig18_size_sweep():

@@ -4,25 +4,119 @@ Prints ``name,us_per_call,derived`` CSV lines. Runs on 8 real CPU devices
 (its own process; never inherits the dry-run's fake 512).
 
     PYTHONPATH=src python -m benchmarks.run [--only primitives|apps|roofline]
+    PYTHONPATH=src python -m benchmarks.run --profile [--cache-dir DIR]
+
+Every run of the primitives section seeds the bench trajectory:
+``BENCH_primitives.json`` at the repo root, one row per measured cell
+(primitive, flow, stage, nbytes, measured_us, est_us, est_source).
+
+``--profile`` exercises the tuning subsystem end to end: run the primitive
+sweep with analytic estimates, ``tune()`` on the live substrate, save the
+``CommProfile`` into the cache dir, *reload it under the same topology
+fingerprint*, install it, and re-run the sweep -- the emitted
+``profile/meas_over_est`` lines compare the median measurement/estimate
+ratio before and after calibration (the calibrated median must sit strictly
+closer to 1.0).
 """
 import argparse
+import json
+import os
+import statistics
 import sys
 
 from benchmarks._timing import ensure_devices
+
+BENCH_JSON = "BENCH_primitives.json"
+
+
+def _write_bench_json(path: str, rows, extra: dict | None = None) -> None:
+    doc = {"schema": ["primitive", "flow", "stage", "nbytes", "measured_us",
+                      "est_us", "est_source"],
+           "rows": list(rows)}
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(doc['rows'])} rows)", file=sys.stderr)
+
+
+def _median_ratio(rows) -> float:
+    """Median measured/estimated ratio over rows with a usable estimate."""
+    ratios = [r["measured_us"] / r["est_us"] for r in rows
+              if r.get("est_us", 0) > 0]
+    return statistics.median(ratios) if ratios else float("nan")
+
+
+def profile_mode(cache_dir: str, out_json: str) -> None:
+    """tune -> save -> reload (same fingerprint) -> re-run the sweep."""
+    from benchmarks import primitives
+    from repro.core import planner
+    from repro.tuning import Tuner
+
+    cube = primitives._setup((8,), ("d",))
+
+    # 1. analytic baseline sweep
+    primitives.ROWS.clear()
+    primitives.fig14_fig16_primitives()
+    analytic_rows = list(primitives.ROWS)
+    med_analytic = _median_ratio(analytic_rows)
+
+    # 2. tune on the live substrate and persist
+    tuner = Tuner(cache_dir=cache_dir)
+    profile = tuner.tune(cube, sizes=(64 * 1024, 256 * 1024, 512 * 1024,
+                                      1024 * 1024))
+    path = tuner.profile_path(cube)
+    print(f"# tuned {profile.describe()} -> {path}", file=sys.stderr)
+
+    # 3. reload under the same topology fingerprint (load() rejects drift)
+    reloaded = tuner.load(cube)
+
+    # 4. calibrated sweep under the reloaded profile
+    primitives.ROWS.clear()
+    with planner.install_profile(reloaded):
+        primitives.fig14_fig16_primitives()
+    measured_rows = list(primitives.ROWS)
+    med_measured = _median_ratio(measured_rows)
+
+    emit_rows = analytic_rows + measured_rows
+    closer = abs(med_measured - 1.0) < abs(med_analytic - 1.0)
+    _write_bench_json(out_json, emit_rows, extra={
+        "median_meas_over_est": {"analytic": med_analytic,
+                                 "measured": med_measured},
+        "calibration_improved": closer,
+        "profile_path": path})
+    print(f"profile/meas_over_est/analytic,{med_analytic:.3f},")
+    print(f"profile/meas_over_est/measured,{med_measured:.3f},"
+          f"closer_to_1={closer}")
+    if not closer:
+        print("# WARNING: calibrated estimates did not improve on the "
+              "analytic baseline", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["primitives", "apps", "roofline"])
+    ap.add_argument("--profile", action="store_true",
+                    help="tune -> save -> reload -> calibrated re-run of "
+                         "the primitive sweep")
+    ap.add_argument("--cache-dir", default=".tuning-cache",
+                    help="CommProfile cache directory for --profile")
+    ap.add_argument("--bench-json", default=BENCH_JSON,
+                    help="bench-trajectory output path")
     args = ap.parse_args()
 
     ensure_devices(8)
 
     print("name,us_per_call,derived")
+    if args.profile:
+        profile_mode(args.cache_dir, args.bench_json)
+        return
     if args.only in (None, "primitives"):
         from benchmarks import primitives
         primitives.run()
+        _write_bench_json(args.bench_json, primitives.ROWS)
     if args.only in (None, "apps"):
         from benchmarks import apps
         apps.run()

@@ -122,9 +122,40 @@ assert summary["programs"] == ["quickstart-fuse"]
 print("record->optimize->execute: rs+ag fused into one hierarchical "
       "all_reduce, bit-identical to the eager result")
 
+# 7. autotuning (measure -> fit -> plan): a Tuner microbenchmarks the
+#    registered flows on the live substrate, fits per-(flow, stage, domain)
+#    alpha-beta models, and persists them as a fingerprint-keyed
+#    CommProfile.  Installing the profile makes algorithm="auto" dispatch
+#    on *measured* data -- every CommEvent (and CommTrace.summary()) then
+#    carries est_source="measured" instead of the analytic constants.
+import tempfile  # noqa: E402
+
+from repro.core import install_profile  # noqa: E402
+from repro.tuning import Tuner  # noqa: E402
+
+tuner = Tuner(cache_dir=tempfile.mkdtemp(prefix="repro-tuning-"))
+prof = tuner.tune(cube, sizes=(16 * 1024, 64 * 1024),
+                  primitives=("all_reduce", "all_to_all"),
+                  reps=2, warmup=1)
+print("tuned:", prof.describe())
+prof = tuner.load(cube)        # reload: fingerprint-checked round-trip
+
+with install_profile(prof), CommTrace() as ttrace:
+    out = jax.jit(shard_map(
+        lambda v: ar_y.all_reduce(v), mesh=cube.mesh,
+        in_specs=P("x", "y", "z", None), out_specs=P("x", None, "z", None),
+        check_vma=False))(x)
+tuned_summary = ttrace.summary()
+print("tuned trace summary:", tuned_summary)
+assert ttrace.events[0].est_source == "measured"
+assert tuned_summary["est_sources"] == {"measured": 1}
+print("auto dispatch priced from the measured CommProfile "
+      f"(flow {ttrace.events[0].flow}, "
+      f"est {ttrace.events[0].seconds * 1e6:.1f}us measured)")
+
 import json, os  # noqa: E402
 if os.environ.get("QUICKSTART_SUMMARY"):
     with open(os.environ["QUICKSTART_SUMMARY"], "w") as f:
-        json.dump({"eager": trace.summary(), "program": summary}, f,
-                  indent=1)
+        json.dump({"eager": trace.summary(), "program": summary,
+                   "tuned": tuned_summary}, f, indent=1)
     print("wrote", os.environ["QUICKSTART_SUMMARY"])

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
+from repro import compat
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -116,13 +116,13 @@ def make_bfs(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
 
         def body(i, visited):
             local = (adj @ visited > 0).astype(jnp.float32)
-            me = lax.axis_index(dims)
+            me = compat.axis_index(dims)
             upd = jnp.zeros((n_nodes,), jnp.float32)
-            upd = lax.dynamic_update_slice(upd, local, (me * n_l,))
+            upd = compat.dynamic_update_slice(upd, local, (me * n_l,))
             new = comm.all_reduce(upd, op="max", algorithm=algorithm)
             return jnp.maximum(visited, new)
 
-        visited = lax.fori_loop(0, iters, body, visited)
+        visited = compat.fori_loop(0, iters, body, visited)
         return visited.sum()
 
     fn = _smap(cube, run, (P(),), P())
@@ -142,13 +142,13 @@ def make_cc(cube: Hypercube, *, n_nodes=4096, iters=8, algorithm="pidcomm"):
 
         def body(i, labels):
             neigh = jnp.where(adj, labels[None, :], big).min(axis=1)
-            me = lax.axis_index(dims)
+            me = compat.axis_index(dims)
             upd = jnp.full((n_nodes,), big)
-            upd = lax.dynamic_update_slice(upd, neigh, (me * n_l,))
+            upd = compat.dynamic_update_slice(upd, neigh, (me * n_l,))
             new = comm.all_reduce(upd, op="min", algorithm=algorithm)
             return jnp.minimum(labels, new)
 
-        labels = lax.fori_loop(0, iters, body, labels)
+        labels = compat.fori_loop(0, iters, body, labels)
         return labels.sum()
 
     fn = _smap(cube, run, (P(),), P())

@@ -9,7 +9,8 @@ from repro.core.comm import (
 from repro.core.collectives import (
     Collectives, APPLICABILITY, ring_all_reduce, tree_all_reduce)
 from repro.core.planner import (
-    CommEstimate, ProgramOpSpec, ProgramPlan, estimate, plan, plan_program)
+    CommEstimate, ProgramOpSpec, ProgramPlan, active_profile, estimate,
+    install_profile, plan, plan_program)
 from repro.core.program import (
     CommFuture, CommOp, CommProgram, LoweredProgram, ProgramExecution,
     ProgramValue)
@@ -25,7 +26,7 @@ __all__ = [
     "Collectives", "APPLICABILITY",
     "ring_all_reduce", "tree_all_reduce",
     "CommEstimate", "ProgramOpSpec", "ProgramPlan",
-    "estimate", "plan", "plan_program",
+    "active_profile", "estimate", "install_profile", "plan", "plan_program",
     "CommFuture", "CommOp", "CommProgram", "LoweredProgram",
     "ProgramExecution", "ProgramValue",
     "quantize_int8", "dequantize_int8", "compressed_pod_all_reduce",

@@ -185,6 +185,9 @@ class CommEvent:
     # was rewritten from.  Empty for eager dispatches.
     program_id: str | None = None
     fused_from: tuple[int, ...] = ()
+    # estimate provenance: "analytic" (hardcoded v5e constants) or
+    # "measured" (an installed repro.tuning CommProfile priced this flow).
+    est_source: str = "analytic"
 
 
 _TRACES: list["CommTrace"] = []
@@ -222,16 +225,23 @@ class CommTrace:
         for e in self.events:
             d = by.setdefault(f"{e.primitive}/{e.flow}", {
                 "count": 0, "stage": e.stage, "payload_bytes": 0,
-                "ici_bytes": 0.0, "dcn_bytes": 0.0, "est_seconds": 0.0})
+                "ici_bytes": 0.0, "dcn_bytes": 0.0, "est_seconds": 0.0,
+                "est_source": e.est_source})
             d["count"] += 1
             d["payload_bytes"] += e.payload_bytes
             d["ici_bytes"] += e.ici_bytes
             d["dcn_bytes"] += e.dcn_bytes
             d["est_seconds"] += e.seconds
+            if d["est_source"] != e.est_source:
+                d["est_source"] = "mixed"
         ici, dcn = self.total_bytes()
         fused = [e for e in self.events if e.fused_from]
+        sources: dict[str, int] = {}
+        for e in self.events:
+            sources[e.est_source] = sources.get(e.est_source, 0) + 1
         return {"events": len(self.events), "ici_bytes": ici,
                 "dcn_bytes": dcn, "by_flow": by,
+                "est_sources": sources,
                 "fused_events": len(fused),
                 "fused_from_ops": sum(len(e.fused_from) for e in fused),
                 "programs": sorted({e.program_id for e in self.events
@@ -386,7 +396,7 @@ class Communicator:
                 num_instances=self.num_instances, payload_bytes=payload,
                 ici_bytes=est.ici_bytes, dcn_bytes=est.dcn_bytes,
                 seconds=est.seconds, program_id=program_id,
-                fused_from=tuple(fused_from)))
+                fused_from=tuple(fused_from), est_source=est.est_source))
         return spec.fn(self, x, op=op, **kwargs) \
             if primitive in ("all_reduce", "reduce_scatter", "reduce") \
             else spec.fn(self, x, **kwargs)
@@ -453,7 +463,7 @@ class Communicator:
                 group_size=self.group_size,
                 num_instances=self.num_instances, payload_bytes=payload,
                 ici_bytes=est.ici_bytes, dcn_bytes=est.dcn_bytes,
-                seconds=est.seconds))
+                seconds=est.seconds, est_source=est.est_source))
         return compress.compressed_pod_all_reduce(
             x, self.cube, self.fast_dims, self.slow_dims, block=block)
 

@@ -14,6 +14,7 @@ Hardware constants are TPU v5e (the deployment target):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import math
@@ -38,6 +39,7 @@ class CommEstimate:
     dcn_bytes: float                   # per-device bytes over DCN
     seconds: float
     stage: str = ""                    # the Table II stage this flow maps to
+    est_source: str = "analytic"       # "analytic" | "measured" provenance
 
     def dominant(self) -> str:
         return "dcn" if self.dcn_bytes / DCN_BW > self.ici_bytes / ICI_BW \
@@ -46,6 +48,46 @@ class CommEstimate:
 
 def _bw_time(ici_bytes: float, dcn_bytes: float) -> float:
     return ici_bytes / ICI_BW + dcn_bytes / DCN_BW
+
+
+# ------------------------------------------------------- measured profiles
+# Stack of installed CommProfiles (repro.tuning.profile); the innermost one
+# prices every estimate whose (flow, stage, domains) its fitted models
+# cover, replacing the hardcoded v5e constants with measured alpha-beta
+# terms.  The planner only needs the duck-typed ``seconds_for`` interface,
+# so there is no import cycle with the tuning package.
+_PROFILES: list = []
+
+
+def active_profile():
+    """The innermost installed profile, or None (analytic constants)."""
+    return _PROFILES[-1] if _PROFILES else None
+
+
+@contextlib.contextmanager
+def install_profile(profile):
+    """Context manager pricing every ``plan``/``estimate``/``plan_program``
+    call (and therefore every ``algorithm="auto"`` dispatch) under it from
+    ``profile``'s measured models.  Nests; the innermost profile wins."""
+    _PROFILES.append(profile)
+    try:
+        yield profile
+    finally:
+        _PROFILES.remove(profile)
+
+
+def _finish(primitive: str, algorithm: str, sched: tuple[str, ...],
+            ici: float, dcn: float, stage: str, profile) -> CommEstimate:
+    """Price one candidate: measured model when the active/passed profile
+    covers this (flow, stage, domains), analytic constants otherwise."""
+    prof = profile if profile is not None else active_profile()
+    if prof is not None:
+        t = prof.seconds_for(algorithm, stage, ici, dcn)
+        if t is not None:
+            return CommEstimate(primitive, algorithm, sched, ici, dcn, t,
+                                stage, "measured")
+    return CommEstimate(primitive, algorithm, sched, ici, dcn,
+                        _bw_time(ici, dcn), stage)
 
 
 def _group_bytes(primitive: str, payload: float, g: int) -> float:
@@ -78,7 +120,7 @@ def _table_ii_stage(primitive: str, algorithm: str) -> str:
 
 def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
              algorithm: str = "pidcomm", *, dtype_bytes: int = 4,
-             block: int = 256) -> CommEstimate:
+             block: int = 256, profile=None) -> CommEstimate:
     """Estimate one collective. ``payload_bytes`` is the per-device payload
     (for all_gather: the local shard; for others: the local buffer).
 
@@ -90,6 +132,12 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
     primitive is an all-reduce spanning both domains; like the runtime, the
     request *falls back to direct* otherwise -- check the returned
     ``algorithm`` field when the distinction matters).
+
+    ``profile`` (or an :func:`install_profile` context) switches the
+    *time* term to the profile's measured alpha-beta models when they cover
+    the flow -- the returned estimate then carries
+    ``est_source="measured"``.  The byte terms stay analytic either way:
+    they are structural properties of the flow.
     """
     if algorithm not in ("pidcomm", "naive", "direct", "hierarchical",
                          "compressed"):
@@ -111,8 +159,8 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         sched = ((f"reduce_scatter[{'x'.join(fast)}]",) if fast else ()) + \
             ((f"all_gather-int8[{'x'.join(slow)}]",) if slow else ()) + \
             ((f"all_gather[{'x'.join(fast)}]",) if fast else ())
-        return CommEstimate(primitive, "compressed", sched, ici, dcn,
-                            _bw_time(ici, dcn), "cm")
+        return _finish(primitive, "compressed", sched, ici, dcn, "cm",
+                       profile)
 
     if algorithm == "naive":
         # replicated-intermediate flow: every device ships its full payload to
@@ -121,8 +169,7 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         dcn = payload_bytes * (g - 1) - ici if gs > 1 else 0.0
         sched = (f"allgather-full[{'x'.join(sel)}]", "local-modulate",
                  "local-slice")
-        return CommEstimate(primitive, "naive", sched, ici, dcn,
-                            _bw_time(ici, dcn), "naive")
+        return _finish(primitive, "naive", sched, ici, dcn, "naive", profile)
 
     if (algorithm != "direct" and primitive == "all_reduce"
             and gs > 1 and gf > 1):
@@ -132,9 +179,8 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         sched = (f"reduce_scatter[{'x'.join(fast)}]",
                  f"all_reduce[{'x'.join(slow)}]",
                  f"all_gather[{'x'.join(fast)}]")
-        return CommEstimate(primitive, "hierarchical", sched, ici, dcn,
-                            _bw_time(ici, dcn),
-                            _table_ii_stage(primitive, "hierarchical"))
+        return _finish(primitive, "hierarchical", sched, ici, dcn,
+                       _table_ii_stage(primitive, "hierarchical"), profile)
 
     ici = _group_bytes(primitive, payload_bytes, gf) if gf > 1 else 0.0
     # direct over a pod-crossing group: the (gs-1)/gs fraction crosses DCN
@@ -143,9 +189,8 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         total = _group_bytes(primitive, payload_bytes * (gf if primitive == "all_gather" else 1), gs)
         dcn = total
     sched = (f"{primitive}[{'x'.join(sel)}]",)
-    return CommEstimate(primitive, "direct", sched, ici, dcn,
-                        _bw_time(ici, dcn),
-                        _table_ii_stage(primitive, "direct"))
+    return _finish(primitive, "direct", sched, ici, dcn,
+                   _table_ii_stage(primitive, "direct"), profile)
 
 
 # -------------------------------------------------------- program planning
@@ -186,7 +231,7 @@ _REQUEST_TO_PLANNER = {
 }
 
 
-def plan_program(cube: Hypercube, ops) -> ProgramPlan:
+def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
     """One planning pass over a whole CommProgram.
 
     Per op: ``algorithm="auto"`` gets the full :func:`plan` candidate race;
@@ -195,12 +240,16 @@ def plan_program(cube: Hypercube, ops) -> ProgramPlan:
     dispatch order interleaves ICI-dominant and DCN-dominant ops so both
     domains stream concurrently, and the level's time is the larger of the
     two domain budgets (plus any op that exceeds both alone).
+
+    ``profile`` (or an :func:`install_profile` context) prices every op
+    from measured models where covered, like :func:`plan`.
     """
     est: dict[int, CommEstimate] = {}
     for o in ops:
         if o.algorithm in ("auto", "pidcomm"):
             est[o.op_id] = plan(cube, o.primitive, o.dims, o.payload_bytes,
-                                allow_compressed=o.allow_compressed)
+                                allow_compressed=o.allow_compressed,
+                                profile=profile)
         else:
             alg = _REQUEST_TO_PLANNER.get(o.algorithm)
             if alg is None:
@@ -220,7 +269,8 @@ def plan_program(cube: Hypercube, ops) -> ProgramPlan:
                     if stage == "im":
                         alg = "pidcomm"
             est[o.op_id] = estimate(
-                cube, o.primitive, o.dims, o.payload_bytes, alg)
+                cube, o.primitive, o.dims, o.payload_bytes, alg,
+                profile=profile)
 
     # dependency levels (wave l = ops whose deps all sit in waves < l)
     level_of: dict[int, int] = {}
@@ -262,7 +312,7 @@ def plan_program(cube: Hypercube, ops) -> ProgramPlan:
 
 
 def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,
-         allow_compressed: bool = False) -> CommEstimate:
+         allow_compressed: bool = False, profile=None) -> CommEstimate:
     """Pick the fastest flow for this primitive/group among the naive host
     flow, the flat direct collective, and (when the group spans both
     domains) the hierarchical split.  This is what ``algorithm="auto"``
@@ -271,12 +321,25 @@ def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,
     ``allow_compressed`` adds the §V-C int8-DCN candidate for pod-crossing
     additive all-reduces; it is opt-in because the caller (e.g. the trainer)
     owns the accuracy contract that lossy compression bends.
+
+    Under an installed (or passed) measured profile the race is priced from
+    the fitted alpha-beta models wherever they cover a candidate, so
+    ``algorithm="auto"`` dispatches on measured data -- the picked
+    estimate's ``est_source`` says which model priced it.  Measured and
+    analytic seconds are not commensurable (CPU wall time vs v5e
+    constants), so when *any* candidate is measured the race is restricted
+    to the measured ones: an uncovered candidate must not win on
+    incomparably-cheap analytic numbers.
     """
     algs = ["naive", "direct", "pidcomm"]
     if allow_compressed and primitive == "all_reduce" \
             and cube.crosses_dcn(dims):
         algs.append("compressed")
-    cands = [estimate(cube, primitive, dims, payload_bytes, a) for a in algs]
+    cands = [estimate(cube, primitive, dims, payload_bytes, a,
+                      profile=profile) for a in algs]
+    measured = [e for e in cands if e.est_source == "measured"]
+    if measured:
+        cands = measured
     # Tie-break away from naive: when the byte model can't separate the host
     # flow from the native collective, the runtime still executes the native
     # one, and the reported stage must reflect that.

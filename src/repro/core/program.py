@@ -178,6 +178,13 @@ class CommOp:
     out_vids: tuple[int, ...]
     fused_from: tuple[int, ...] = ()   # provenance: recorded op ids
     coalesced: bool = False
+    # multi-dim all_to_all chain (§VII DLRM pattern): per-stage
+    # (communicator, kwargs, algorithm) triples.  A chained op is ONE IR op
+    # -- jointly planned over the union of its dims -- whose execution
+    # dispatches the stages in order, because the sequential per-dim chain
+    # is what the recorded program computed (a single joint multi-dim
+    # all_to_all permutes blocks differently and is NOT bit-identical).
+    chain: tuple = ()
 
     @property
     def bitmap(self) -> str:
@@ -188,7 +195,8 @@ class CommOp:
         outs = ",".join(f"v{v}" for v in self.out_vids)
         tag = ""
         if self.fused_from:
-            kind = "coalesced" if self.coalesced else "fused"
+            kind = "coalesced" if self.coalesced else (
+                "chained" if self.chain else "fused")
             tag = f" [{kind} from {list(self.fused_from)}]"
         return (f"op{self.op_id}: {outs} = {self.primitive}"
                 f"[{self.bitmap}/{self.algorithm}]({ins}){tag}")
@@ -296,7 +304,8 @@ class CommProgram:
 
     def lower(self, *, fuse: bool = True, coalesce: bool = True,
               coalesce_bytes: int = DEFAULT_COALESCE_BYTES,
-              split_all_reduce: str | bool = "cost") -> "LoweredProgram":
+              split_all_reduce: str | bool = "cost",
+              merge_a2a: bool = True) -> "LoweredProgram":
         """Optimize + jointly plan the recorded ops.
 
         ``split_all_reduce``: ``False`` never rewrites, ``True`` always
@@ -304,6 +313,10 @@ class CommProgram:
         ``"cost"`` (default) splits only when the planner's estimate is
         strictly faster -- on this cost model the flat split ties the fused
         collective, so "cost" effectively keeps the fused form.
+
+        ``merge_a2a``: merge consecutive all_to_all ops over disjoint
+        hypercube dims into one jointly-planned multi-dim chain op (§VII
+        DLRM pattern); execution stays the bit-identical sequential chain.
         """
         if self._open:
             raise RuntimeError(
@@ -315,6 +328,8 @@ class CommProgram:
             ops = _fuse_rs_ag(self, ops, out_vids)
         if split_all_reduce:
             ops = _split_all_reduce(self, ops, mode=split_all_reduce)
+        if merge_a2a:
+            ops = _merge_all_to_all(self, ops, out_vids)
         if coalesce:
             ops = _coalesce(self, ops, max_bytes=coalesce_bytes)
         produced = (set(self._consts) | set(self._input_vids)
@@ -420,6 +435,56 @@ def _fuse_rs_ag(program: CommProgram, ops: list[CommOp],
             i = ops.index(a)
             ops = [o for o in ops if o is not a and o is not b]
             ops.insert(i, fused)
+            changed = True
+            break
+    return ops
+
+
+def _merge_all_to_all(program: CommProgram, ops: list[CommOp],
+                      out_vids: tuple[int, ...]) -> list[CommOp]:
+    """Peephole (§VII DLRM): consecutive all_to_all ops whose dim
+    selections are *disjoint* -- the embedding-exchange chains that walk one
+    hypercube dim group after another -- merge into one multi-dim chain op,
+    planned jointly over the union of the dims.
+
+    The merged op keeps sequential per-stage execution (see
+    :class:`CommOp.chain`): a single joint all_to_all over the combined
+    dims orders blocks differently, so chaining is the only rewrite that
+    stays bit-identical to the unfused program.
+    """
+    changed = True
+    while changed:
+        changed = False
+        cons = _consumers(ops)
+        for a in ops:
+            if a.primitive != "all_to_all" or a.coalesced:
+                continue
+            v = a.out_vids[0]
+            if v in out_vids:           # the intermediate is a result
+                continue
+            users = cons.get(v, [])
+            if len(users) != 1:
+                continue
+            b = users[0]
+            if (b.primitive != "all_to_all" or b.coalesced
+                    or b.comm.cube is not a.comm.cube
+                    or set(a.comm.dims) & set(b.comm.dims)):
+                continue
+            chain = (a.chain or ((a.comm, a.kwargs, a.algorithm),)) \
+                + (b.chain or ((b.comm, b.kwargs, b.algorithm),))
+            union = tuple(d for d in a.comm.cube.dim_names
+                          if d in a.comm.dims + b.comm.dims)
+            merged = CommOp(
+                op_id=_next_op_id(ops, program), primitive="all_to_all",
+                comm=a.comm.cube.comm(union),
+                algorithm=a.algorithm if a.algorithm == b.algorithm
+                else "auto",
+                op=a.op, kwargs={},     # per-stage kwargs live in the chain
+                in_vids=a.in_vids, out_vids=b.out_vids,
+                fused_from=_origin_ids(a) + _origin_ids(b), chain=chain)
+            i = ops.index(a)
+            ops = [o for o in ops if o is not a and o is not b]
+            ops.insert(i, merged)
             changed = True
             break
     return ops
@@ -559,7 +624,16 @@ class LoweredProgram:
         import jax.numpy as jnp
         meta = (self.program.program_id, op.fused_from)
         with _suspend_recording():
-            if op.coalesced:
+            if op.chain:
+                # merged all_to_all chain: dispatch the recorded stages in
+                # order, all carrying the merged op's provenance
+                val = env[op.in_vids[0]]
+                for c_comm, c_kwargs, c_alg in op.chain:
+                    val = c_comm._dispatch(
+                        "all_to_all", val, algorithm=c_alg, op=op.op,
+                        _meta=meta, **c_kwargs)
+                env[op.out_vids[0]] = val
+            elif op.coalesced:
                 vals = [env[v] for v in op.in_vids]
                 flat = jnp.concatenate([jnp.ravel(v) for v in vals])
                 red = op.comm._dispatch("all_reduce", flat,

@@ -264,6 +264,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                 tok, pos)
     rec["cube"] = topo.cube.describe()
     rec["comm_trace"] = trace.summary()
+    # estimate provenance: which cost model priced this cell's schedule
+    # ("analytic" constants vs an installed measured CommProfile)
+    rec["est_sources"] = rec["comm_trace"].get("est_sources", {})
     rec["lower_s"] = round(time.monotonic() - t0, 1)
 
     t1 = time.monotonic()
@@ -468,11 +471,25 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--probe", action="store_true",
                     help="add two-point cost probes to existing cell JSONs")
+    ap.add_argument("--profile", default=None, metavar="PROFILE_JSON",
+                    help="price comm_trace estimates from a tuned "
+                         "CommProfile instead of the analytic constants "
+                         "(cells record est_source='measured')")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
+    import contextlib
+    profile_ctx = contextlib.nullcontext()
+    if args.profile:
+        from repro.core.planner import install_profile
+        from repro.tuning import CommProfile
+        # no cube check: the production mesh is a fake-device stand-in, so
+        # fingerprint enforcement is the caller's call here
+        profile_ctx = install_profile(CommProfile.load(args.profile))
+
     if args.probe:
-        probe_pass(args)
+        with profile_ctx:
+            probe_pass(args)
         return
 
     os.makedirs(args.out, exist_ok=True)
@@ -486,24 +503,25 @@ def main():
             for mp in meshes:
                 cells.append((arch, shape, mp))
 
-    for arch, shape, mp in cells:
-        tag = f"{arch}_{shape}_{'multipod' if mp else 'pod'}"
-        path = os.path.join(args.out, tag + ".json")
-        if os.path.exists(path):
-            print(f"== {tag}: cached")
-            continue
-        print(f"== {tag}")
-        try:
-            rec = run_cell(arch, shape, multi_pod=mp)
-        except Exception as e:
-            rec = {"arch": arch, "shape": shape,
-                   "mesh": "2x16x16" if mp else "16x16",
-                   "status": "error", "error": repr(e),
-                   "trace": traceback.format_exc()[-4000:]}
-            print(rec["trace"])
-        with open(path, "w") as f:
-            json.dump(rec, f, indent=1)
-        print(f"   -> {rec['status']}")
+    with profile_ctx:
+        for arch, shape, mp in cells:
+            tag = f"{arch}_{shape}_{'multipod' if mp else 'pod'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"== {tag}: cached")
+                continue
+            print(f"== {tag}")
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()[-4000:]}
+                print(rec["trace"])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"   -> {rec['status']}")
 
 
 def probe_pass(args):

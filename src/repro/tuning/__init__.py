@@ -1,0 +1,18 @@
+# Tuning subsystem: microbenchmark the registered collectives on the live
+# substrate, fit per-(flow, stage, domain) alpha-beta models, persist them
+# as fingerprint-keyed CommProfiles, and let the planner price candidates
+# from measured data (`planner.install_profile` / `algorithm="auto"`).
+from repro.tuning.profile import (
+    SCHEMA_VERSION, CommProfile, LinkModel, MeasuredSample,
+    ProfileMismatchError, fingerprint_key, fit_models, topology_fingerprint)
+from repro.tuning.microbench import (
+    DEFAULT_SIZES, measure_cell, sweep)
+from repro.tuning.tuner import DEFAULT_CACHE_DIR, Tuner
+
+__all__ = [
+    "SCHEMA_VERSION", "CommProfile", "LinkModel", "MeasuredSample",
+    "ProfileMismatchError", "fingerprint_key", "fit_models",
+    "topology_fingerprint",
+    "DEFAULT_SIZES", "measure_cell", "sweep",
+    "DEFAULT_CACHE_DIR", "Tuner",
+]

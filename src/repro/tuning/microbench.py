@@ -1,0 +1,191 @@
+"""Collective microbenchmarks on the live substrate (the tuning sweep).
+
+Measures the eight registered PID-Comm primitives through the real
+``Communicator`` dispatch path -- each cell is one (primitive, candidate
+algorithm, dim selection, payload size) and is timed with the benchmark
+harness's median-of-reps wall clock (``benchmarks/_timing.bench``; a local
+fallback keeps the module importable when the repo-root ``benchmarks``
+package is not on the path).
+
+Every cell runs under a :class:`~repro.core.comm.CommTrace`, so the
+recorded :class:`~repro.core.comm.CommEvent` supplies the *structural*
+facts of the executed flow (Table II stage, analytic per-device ICI/DCN
+bytes) and the measurement supplies the time; the pair becomes one
+:class:`~repro.tuning.profile.MeasuredSample` for the alpha-beta fit.
+
+Candidate set per cell mirrors :func:`repro.core.planner.plan`'s race:
+``naive`` and ``direct`` everywhere, plus ``hierarchical`` for additive
+all-reduces whose group spans both domains (where the dispatcher escalates
+``direct`` away, it is skipped rather than mis-measured).
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.tuning.profile import MeasuredSample
+
+# Sweep defaults: payload sizes (per-device bytes) chosen to straddle the
+# latency- and bandwidth-dominated regimes on the CPU substrate without
+# making a full sweep slow.
+DEFAULT_SIZES = (64 * 1024, 256 * 1024, 1024 * 1024)
+
+PE_PRIMITIVES = ("all_to_all", "reduce_scatter", "all_reduce", "all_gather")
+ROOTED_PRIMITIVES = ("scatter", "gather", "reduce", "broadcast")
+
+# executed registry flow -> the planner candidate it prices as (everything
+# unlisted ran the native direct flow).
+_FLOW_TO_CANDIDATE = {
+    "naive": "naive",
+    "hierarchical": "hierarchical",
+    "compressed": "compressed",
+}
+
+
+def _bench_fallback(fn, *, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall-time per call in microseconds (mirror of
+    ``benchmarks/_timing.bench`` for installs without the repo root)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+try:
+    from benchmarks._timing import bench as _bench
+except ImportError:      # pragma: no cover - repo-root package not on path
+    _bench = _bench_fallback
+
+
+def _candidates(cube, primitive: str, dims) -> list[str]:
+    """Dispatch algorithm requests to measure for one cell."""
+    sel = cube.resolve_dims(dims)
+    fast, slow = cube.split_fast_slow(sel)
+    if primitive == "all_reduce" and fast and slow:
+        # the dispatcher escalates any direct request to the hierarchical
+        # split here, so "direct" is unreachable -- measure what runs.
+        return ["naive", "hierarchical"]
+    if primitive == "broadcast":
+        return ["naive"]             # single registered flow
+    return ["naive", "pidcomm"]
+
+
+def _smap_call(cube, f, in_specs, out_specs, *args):
+    import jax
+    from repro.compat import shard_map
+    fn = jax.jit(shard_map(f, mesh=cube.mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False))
+    return lambda: jax.block_until_ready(fn(*args))
+
+
+def _pe_cell(cube, comm, primitive: str, n: int, algorithm: str):
+    """Build the timed callable for one PE<->PE cell.  The payload is a
+    fully-sharded ``(*dim_sizes, n)`` fp32 array, so each PE sees an
+    ``(1, ..., 1, n)`` shard -- per-device payload ``4 * n`` bytes."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    spec = P(*cube.dim_names, None)
+    x = jnp.ones(tuple(cube.dim_sizes) + (n,), jnp.float32)
+    axis = len(cube.dim_sizes)      # the payload axis, per shard
+    if primitive == "all_reduce":
+        f = lambda v: comm.all_reduce(v, algorithm=algorithm)
+    elif primitive == "reduce_scatter":
+        f = lambda v: comm.reduce_scatter(v, axis=axis, algorithm=algorithm)
+    elif primitive == "all_gather":
+        f = lambda v: comm.all_gather(v, axis=axis, algorithm=algorithm)
+    elif primitive == "all_to_all":
+        f = lambda v: comm.all_to_all(v, split_axis=axis, concat_axis=axis,
+                                      algorithm=algorithm)
+    else:
+        raise ValueError(primitive)
+    return _smap_call(cube, f, (spec,), spec, x)
+
+
+def _rooted_cell(cube, comm, primitive: str, n: int, algorithm: str):
+    """Timed callable for one host-rooted cell (jit-boundary transfer)."""
+    import jax
+    g = comm.group_size
+    host = np.ones((g, n), np.float32)
+    if primitive == "scatter":
+        return lambda: jax.block_until_ready(
+            comm.scatter(host, axis=0, algorithm=algorithm))
+    if primitive == "broadcast":
+        return lambda: jax.block_until_ready(
+            comm.broadcast(host, algorithm=algorithm))
+    dev = comm.scatter(host, axis=0)
+    if primitive == "gather":
+        return lambda: comm.gather(dev, algorithm=algorithm)
+    if primitive == "reduce":
+        return lambda: comm.reduce(dev, axis=0, algorithm=algorithm)
+    raise ValueError(primitive)
+
+
+def measure_cell(cube, primitive: str, dims, nbytes: int,
+                 algorithms: Sequence[str] | None = None, *,
+                 reps: int = 5, warmup: int = 2) -> list[MeasuredSample]:
+    """Measure one (primitive, dim selection, size) cell across candidate
+    dispatch algorithms; returns one sample per executed flow."""
+    from repro.core.comm import CommTrace
+    sel = cube.resolve_dims(dims)
+    comm = cube.comm(sel)
+    g = comm.group_size
+    # per-device fp32 elements; keep divisibility for rs/aa splits
+    n = max(int(nbytes) // 4, g)
+    n -= n % g
+    if algorithms is None:
+        algorithms = _candidates(cube, primitive, sel)
+    samples: list[MeasuredSample] = []
+    for alg in algorithms:
+        if primitive in PE_PRIMITIVES:
+            call = _pe_cell(cube, comm, primitive, n, alg)
+        else:
+            call = _rooted_cell(cube, comm, primitive, n, alg)
+        with CommTrace() as tr:
+            us = _bench(call, warmup=warmup, reps=reps)
+        ev = next((e for e in tr.events if e.primitive == primitive), None)
+        if ev is None:       # group of 1: nothing dispatched
+            continue
+        samples.append(MeasuredSample(
+            primitive=primitive,
+            algorithm=_FLOW_TO_CANDIDATE.get(ev.flow, "direct"),
+            stage=ev.stage, bitmap=ev.bitmap, nbytes=4 * n,
+            ici_bytes=ev.ici_bytes, dcn_bytes=ev.dcn_bytes,
+            seconds=us * 1e-6))
+    return samples
+
+
+def sweep(cube, *, sizes: Sequence[int] = DEFAULT_SIZES,
+          primitives: Sequence[str] | None = None,
+          reps: int = 5, warmup: int = 2,
+          progress=None) -> list[MeasuredSample]:
+    """The full tuning sweep: every primitive x candidate x size, over the
+    innermost dim and (when the cube has more than one dim) the whole cube
+    -- two group shapes give the fit both a small-group and a large-group
+    anchor, and on a pod-spanning cube the second selection exercises the
+    DCN-domain models."""
+    prims = tuple(primitives) if primitives is not None \
+        else PE_PRIMITIVES + ROOTED_PRIMITIVES
+    selections = [(cube.dim_names[-1],)]
+    if len(cube.dim_names) > 1:
+        selections.append(tuple(cube.dim_names))
+    samples: list[MeasuredSample] = []
+    for primitive in prims:
+        for sel in selections:
+            for nbytes in sizes:
+                cell = measure_cell(cube, primitive, sel, nbytes,
+                                    reps=reps, warmup=warmup)
+                samples.extend(cell)
+                if progress is not None:
+                    progress(primitive, sel, nbytes, cell)
+    return samples
+
+
+__all__ = ["DEFAULT_SIZES", "PE_PRIMITIVES", "ROOTED_PRIMITIVES",
+           "measure_cell", "sweep"]

@@ -1,0 +1,175 @@
+"""Tuner front-end: tune -> persist -> select, with a measurement fallback.
+
+This is the user-facing surface of the tuning subsystem:
+
+  ``Tuner(cache_dir).tune(cube, sizes=...)``
+      runs the :mod:`repro.tuning.microbench` sweep on the live substrate,
+      fits the per-(flow, stage, domain) alpha-beta models, merges into any
+      existing profile for the same topology fingerprint (partial sweeps
+      accumulate) and persists the result in the cache dir.
+
+  ``tuner.select(primitive, nbytes, comm)``
+      the measured analogue of :func:`repro.core.planner.plan`: prices the
+      candidate flows from the profile and returns the dispatch algorithm
+      to request.  When any candidate's fit is low-confidence (uncovered,
+      under-sampled, or poor r^2) it falls back to *exhaustively measuring*
+      the candidates at the requested size, folds those samples back into
+      the cached profile, and picks the measured winner.
+
+  ``install()``
+      convenience wrapper around
+      :func:`repro.core.planner.install_profile` for the cube's cached
+      profile, so ``algorithm="auto"`` dispatch anywhere under the context
+      prices from measurements::
+
+          tuner = Tuner(cache_dir=".tuning-cache")
+          profile = tuner.tune(cube)
+          with planner.install_profile(profile):
+              comm.all_reduce(x)          # auto now dispatches on data
+
+Cache layout: one JSON per topology fingerprint,
+``{cache_dir}/commprofile-{fingerprint_hash}.json``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+from repro.tuning import microbench
+from repro.tuning.profile import (
+    CommProfile, MIN_R2, fingerprint_key, topology_fingerprint)
+
+DEFAULT_CACHE_DIR = os.path.join("~", ".cache", "repro", "tuning")
+
+# planner candidate name -> the Communicator dispatch request executing it
+_CANDIDATE_TO_DISPATCH = {
+    "naive": "naive",
+    "direct": "pidcomm",
+    "hierarchical": "hierarchical",
+    "compressed": "compressed",
+}
+
+
+class Tuner:
+    """Measured-profile manager bound to one persistent cache directory."""
+
+    def __init__(self, cache_dir: str | os.PathLike | None = None):
+        cache = cache_dir or os.environ.get("REPRO_TUNING_CACHE") \
+            or DEFAULT_CACHE_DIR
+        self.cache_dir = os.path.expanduser(os.fspath(cache))
+        self._profiles: dict[str, CommProfile] = {}   # by fingerprint hash
+
+    # ----------------------------------------------------------- identity
+    def profile_path(self, cube) -> str:
+        key = fingerprint_key(topology_fingerprint(cube))
+        return os.path.join(self.cache_dir, f"commprofile-{key}.json")
+
+    # --------------------------------------------------------------- tune
+    def tune(self, cube, *,
+             sizes: Sequence[int] = microbench.DEFAULT_SIZES,
+             primitives: Sequence[str] | None = None,
+             reps: int = 5, warmup: int = 2,
+             save: bool = True, progress=None) -> CommProfile:
+        """Sweep, fit, merge with any cached profile of this topology, and
+        persist.  Returns the merged profile (also memoized for
+        :meth:`select`)."""
+        samples = microbench.sweep(cube, sizes=sizes, primitives=primitives,
+                                   reps=reps, warmup=warmup,
+                                   progress=progress)
+        prof = CommProfile(topology_fingerprint(cube), samples)
+        existing = self._load_if_cached(cube)
+        if existing is not None:
+            prof = existing.merge(prof)
+        if save:
+            prof.save(self.profile_path(cube))
+        self._profiles[fingerprint_key(prof.fingerprint)] = prof
+        return prof
+
+    def load(self, cube) -> CommProfile:
+        """Load the cached profile for ``cube``'s fingerprint (raising
+        ``FileNotFoundError`` when never tuned, ``ProfileMismatchError`` on
+        schema/topology drift)."""
+        prof = CommProfile.load(self.profile_path(cube), cube=cube)
+        self._profiles[fingerprint_key(prof.fingerprint)] = prof
+        return prof
+
+    def _load_if_cached(self, cube) -> CommProfile | None:
+        key = fingerprint_key(topology_fingerprint(cube))
+        if key in self._profiles:
+            return self._profiles[key]
+        try:
+            return self.load(cube)
+        except FileNotFoundError:
+            return None
+
+    def profile_for(self, cube, *, tune_if_missing: bool = False,
+                    **tune_kwargs) -> CommProfile:
+        """The cube's profile: memoized, else loaded from cache, else
+        (opt-in) measured on the spot."""
+        prof = self._load_if_cached(cube)
+        if prof is None:
+            if not tune_if_missing:
+                raise FileNotFoundError(
+                    f"no tuned profile for {cube.describe()} in "
+                    f"{self.cache_dir}; run Tuner.tune(cube) first")
+            prof = self.tune(cube, **tune_kwargs)
+        return prof
+
+    def install(self, cube, **kwargs):
+        """``planner.install_profile`` context for the cube's profile."""
+        from repro.core import planner
+        return planner.install_profile(self.profile_for(cube, **kwargs))
+
+    # ------------------------------------------------------------- select
+    def select(self, primitive: str, nbytes: int, comm, *,
+               op: str = "add", confidence: float = MIN_R2,
+               reps: int = 3, warmup: int = 1) -> str:
+        """Pick the dispatch algorithm for one call site from measured data.
+
+        Prices the planner's candidate race through the profile; when every
+        candidate's fit clears ``confidence``, returns the cheapest.  A
+        low-confidence fit triggers the exhaustive fallback: measure the
+        candidates at exactly this size, merge the new samples into the
+        cached profile (so the next call is covered), and return the
+        measured winner's dispatch request.
+        """
+        from repro.core import planner
+        cube = comm.cube
+        prof = self.profile_for(cube, tune_if_missing=False) \
+            if os.path.exists(self.profile_path(cube)) \
+            or fingerprint_key(topology_fingerprint(cube)) in self._profiles \
+            else CommProfile(topology_fingerprint(cube))
+
+        algs = ["naive", "direct"]
+        if primitive == "all_reduce" and op == "add" \
+                and comm.fast_dims and comm.slow_dims:
+            algs.append("pidcomm")      # resolves to the hierarchical split
+        priced = []
+        trusted = True
+        for alg in algs:
+            est = planner.estimate(cube, primitive, comm.dims, nbytes, alg,
+                                   profile=prof)
+            conf = prof.confidence(est.algorithm, est.stage,
+                                   needs_dcn=est.dcn_bytes > 0)
+            trusted = trusted and conf >= confidence
+            priced.append(est)
+        if trusted:
+            best = min(priced, key=lambda e: (e.seconds,
+                                              e.algorithm == "naive"))
+            return _CANDIDATE_TO_DISPATCH[best.algorithm]
+
+        # exhaustive-measure fallback: run the candidates at this size
+        samples = microbench.measure_cell(
+            cube, primitive, comm.dims, nbytes,
+            [_CANDIDATE_TO_DISPATCH[e.algorithm] for e in priced],
+            reps=reps, warmup=warmup)
+        if not samples:
+            return "pidcomm"            # group of 1: nothing to choose
+        merged = prof.merge(CommProfile(prof.fingerprint, samples))
+        merged.save(self.profile_path(cube))
+        self._profiles[fingerprint_key(merged.fingerprint)] = merged
+        best = min(samples, key=lambda s: s.seconds)
+        return _CANDIDATE_TO_DISPATCH[best.algorithm]
+
+
+__all__ = ["DEFAULT_CACHE_DIR", "Tuner"]

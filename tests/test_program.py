@@ -513,3 +513,73 @@ def test_error_feedback_optstate_plumbing(cube_pod):
     ring = substrate.fake_cube((8,), ("d",), {"d": 8})
     assert not use_error_feedback(tc, ring)          # no DCN: nothing to do
     assert not use_error_feedback(TrainConfig(), cube_pod)
+
+
+# -------------------------------------------------- all_to_all chain merge
+def test_merge_a2a_chain_bit_identical(cube_2x2x2):
+    """§VII DLRM peephole: consecutive all_to_all ops over disjoint dims
+    lower to ONE chained IR op (jointly planned over the union of dims)
+    whose execution is bit-identical to the unfused program -- the merged
+    form must chain, because a single joint multi-dim all_to_all orders
+    blocks differently."""
+    ca = cube_2x2x2.comm("100")
+    cc = cube_2x2x2.comm("001")
+    nd = len(cube_2x2x2.dim_sizes)
+    rng = np.random.RandomState(3)
+    x = rng.randn(2, 2, 2, 16).astype(np.float32)
+
+    prog = cube_2x2x2.program(name="aa-chain")
+    with prog:
+        v = prog.input(_per_shard_aval(cube_2x2x2, (16,)))
+        w = ca.all_to_all(v, split_axis=nd, concat_axis=nd)
+        prog.output(cc.all_to_all(w, split_axis=nd, concat_axis=nd))
+
+    merged = prog.lower()
+    plain = prog.lower(merge_a2a=False)
+    assert len(plain.ops) == 2
+    assert len(merged.ops) == 1
+    mop = merged.ops[0]
+    assert mop.fused_from == (0, 1) and len(mop.chain) == 2
+    assert mop.comm.dims == ("a", "c")               # planned over the union
+    est = merged.plan.estimates[mop.op_id]
+    assert est.primitive == "all_to_all"
+
+    with CommTrace() as tr:
+        got = substrate.run_per_shard(cube_2x2x2,
+                                      lambda v: merged.execute(v), x)
+    want = substrate.run_per_shard(cube_2x2x2,
+                                   lambda v: plain.execute(v), x)
+    np.testing.assert_array_equal(got, want)         # bit-identical
+    # ... and both equal the composed oracles
+    o = oracles.all_to_all(x, 3, (0,), split_axis=0, concat_axis=0)
+    o = oracles.all_to_all(o, 3, (2,), split_axis=0, concat_axis=0)
+    np.testing.assert_array_equal(got, o)
+    # execution chains both stages under the merged op's provenance
+    assert [e.primitive for e in tr.events] == ["all_to_all", "all_to_all"]
+    assert all(e.fused_from == (0, 1) for e in tr.events)
+    assert all(e.program_id == "aa-chain" for e in tr.events)
+
+
+def test_merge_a2a_requires_disjoint_dims(cube_2x2x2):
+    """Overlapping dim selections must NOT merge (the rewrite is only
+    defined for disjoint groups), and an intermediate that is a program
+    output is kept."""
+    cab = cube_2x2x2.comm("110")
+    cbc = cube_2x2x2.comm("011")
+    nd = len(cube_2x2x2.dim_sizes)
+    prog = cube_2x2x2.program(name="aa-overlap")
+    with prog:
+        v = prog.input(_per_shard_aval(cube_2x2x2, (16,)))
+        w = cab.all_to_all(v, split_axis=nd, concat_axis=nd)
+        prog.output(cbc.all_to_all(w, split_axis=nd, concat_axis=nd))
+    assert len(prog.lower().ops) == 2                # shared dim "b": no merge
+
+    ca = cube_2x2x2.comm("100")
+    cc = cube_2x2x2.comm("001")
+    prog2 = cube_2x2x2.program(name="aa-mid-out")
+    with prog2:
+        v = prog2.input(_per_shard_aval(cube_2x2x2, (16,)))
+        w = ca.all_to_all(v, split_axis=nd, concat_axis=nd)
+        out = cc.all_to_all(w, split_axis=nd, concat_axis=nd)
+        prog2.output(w, out)                         # intermediate escapes
+    assert len(prog2.lower().ops) == 2

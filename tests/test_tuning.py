@@ -1,0 +1,311 @@
+"""Tuning-subsystem tests: profile persistence, fitted pricing, and the
+measured-dispatch contract.
+
+Persistence (device-free, fake cubes):
+  * JSON round-trip determinism -- save -> load -> save is byte-identical;
+  * schema-version bump rejection with a retune recipe;
+  * topology-fingerprint mismatch rejection with a retune recipe;
+  * partial-sweep merge (same fingerprint unions + refits, different
+    fingerprint raises).
+
+Measured dispatch (live 8-device substrate):
+  * a synthetic profile that inverts the analytic ranking flips
+    ``planner.plan()``'s pick AND a recorded ``CommProgram``'s plan for a
+    conformance cell, execution stays bit-identical to the NumPy oracle,
+    and every resulting CommEvent carries ``est_source="measured"``;
+  * a real (tiny) ``Tuner.tune`` sweep prices subsequent plans as
+    measured and survives a cache round-trip;
+  * ``Tuner.select`` falls back to exhaustive measurement on
+    low-confidence fits and persists what it measured.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.comm import CommTrace
+from repro.testing import oracles, substrate
+from repro.testing.substrate import fake_cube
+from repro.tuning import (
+    CommProfile, LinkModel, MeasuredSample, ProfileMismatchError, Tuner,
+    fit_models, topology_fingerprint)
+from repro.tuning import profile as profile_mod
+
+
+def _sample(**kw):
+    base = dict(primitive="all_reduce", algorithm="direct", stage="im",
+                bitmap="1", nbytes=1 << 20, ici_bytes=2.0 * (1 << 20) * 7 / 8,
+                dcn_bytes=0.0, seconds=1e-3)
+    base.update(kw)
+    return MeasuredSample(**base)
+
+
+@pytest.fixture()
+def ring_fake():
+    return fake_cube((8,), ("d",), {"d": 8})
+
+
+@pytest.fixture()
+def rect_fake():
+    return fake_cube((2, 4), ("data", "model"), {"r": 2, "c": 4})
+
+
+# ------------------------------------------------------------- persistence
+def test_roundtrip_deterministic(tmp_path, ring_fake):
+    samples = [_sample(nbytes=n, ici_bytes=n * 7 / 8, seconds=n * 1e-9 + 5e-5)
+               for n in (1 << 16, 1 << 18, 1 << 20)]
+    prof = CommProfile(topology_fingerprint(ring_fake), samples)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    prof.save(p1)
+    CommProfile.load(p1).save(p2)
+    assert p1.read_bytes() == p2.read_bytes()
+    re = CommProfile.load(p1, cube=ring_fake)       # fingerprint-checked
+    assert re.models == prof.models
+    assert re.samples == prof.samples
+
+
+def test_schema_version_bump_rejected(tmp_path, ring_fake):
+    prof = CommProfile(topology_fingerprint(ring_fake), [_sample()])
+    path = prof.save(tmp_path / "prof.json")
+    data = json.loads(open(path).read())
+    data["schema_version"] = profile_mod.SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(data, f)
+    with pytest.raises(ProfileMismatchError, match="schema"):
+        CommProfile.load(path)
+    with pytest.raises(ProfileMismatchError, match="tune"):
+        CommProfile.load(path)      # the error carries a retune recipe
+
+
+def test_fingerprint_mismatch_rejected(tmp_path, ring_fake, rect_fake):
+    prof = CommProfile(topology_fingerprint(ring_fake), [_sample()])
+    path = prof.save(tmp_path / "prof.json")
+    with pytest.raises(ProfileMismatchError, match="fingerprint mismatch"):
+        CommProfile.load(path, cube=rect_fake)
+    with pytest.raises(ProfileMismatchError, match="tune"):
+        CommProfile.load(path, cube=rect_fake)   # recipe present
+    # the mismatch names what differs
+    with pytest.raises(ProfileMismatchError, match="dims"):
+        prof.check_fingerprint(rect_fake)
+
+
+def test_merge_partial_sweeps(ring_fake, rect_fake):
+    fp = topology_fingerprint(ring_fake)
+    a = CommProfile(fp, [_sample(algorithm="naive", stage="naive")])
+    b = CommProfile(fp, [_sample(algorithm="direct", stage="im"),
+                         _sample(algorithm="naive", stage="naive")])  # dup
+    merged = a.merge(b)
+    assert len(merged.samples) == 2                # exact dup dropped
+    assert "naive/naive/ici" in merged.models
+    assert "direct/im/ici" in merged.models
+    with pytest.raises(ProfileMismatchError, match="different topologies"):
+        a.merge(CommProfile(topology_fingerprint(rect_fake), []))
+
+
+def test_fit_recovers_alpha_beta():
+    alpha, beta = 2e-4, 3e-9
+    samples = [_sample(nbytes=n, ici_bytes=float(n),
+                       seconds=alpha + beta * n)
+               for n in (1 << 14, 1 << 16, 1 << 18, 1 << 20)]
+    models = fit_models(samples)
+    m = models["direct/im/ici"]
+    assert m.alpha == pytest.approx(alpha, rel=1e-3)
+    assert m.beta == pytest.approx(beta, rel=1e-3)
+    assert m.r2 > 0.99 and m.n == 4
+    prof = CommProfile({"any": "fp"}, samples)
+    t = prof.seconds_for("direct", "im", 1 << 19, 0.0)
+    assert t == pytest.approx(alpha + beta * (1 << 19), rel=1e-3)
+    assert prof.is_confident("direct", "im")
+    # uncovered flows price as None -> planner falls back to analytic
+    assert prof.seconds_for("hierarchical", "im", 1.0, 0.0) is None
+    assert prof.confidence("hierarchical", "im") == 0.0
+
+
+def test_fit_dcn_domain_split():
+    """A flow moving both ICI and DCN bytes gets both domain models, and
+    dcn pricing needs the dcn model."""
+    # ici and dcn columns must not be collinear or the joint fit is
+    # underdetermined (lstsq would split the slope arbitrarily)
+    rng = [(1 << 16, 1 << 13), (1 << 18, 1 << 13), (1 << 18, 1 << 16),
+           (1 << 20, 1 << 14)]
+    samples = [_sample(algorithm="hierarchical", stage="im",
+                       ici_bytes=float(i), dcn_bytes=float(d),
+                       seconds=1e-5 + 2e-9 * i + 4e-8 * d)
+               for i, d in rng]
+    models = fit_models(samples)
+    assert set(models) == {"hierarchical/im/ici", "hierarchical/im/dcn"}
+    prof = CommProfile({"fp": 1}, samples)
+    t = prof.seconds_for("hierarchical", "im", 1e6, 1e5)
+    assert t == pytest.approx(1e-5 + 2e-9 * 1e6 + 4e-8 * 1e5, rel=0.05)
+
+
+# ----------------------------------------------- measured pricing / plan()
+def _inverting_profile(cube):
+    """Synthetic measured profile that makes the naive host flow the
+    cheapest candidate -- the opposite of the analytic ranking."""
+    return CommProfile(topology_fingerprint(cube), models={
+        "naive/naive/ici": LinkModel(alpha=0.0, beta=1e-12, n=8, r2=1.0),
+        "direct/im/ici": LinkModel(alpha=1.0, beta=1e-6, n=8, r2=1.0),
+        "direct/cm/ici": LinkModel(alpha=1.0, beta=1e-6, n=8, r2=1.0),
+    })
+
+
+def test_synthetic_profile_inverts_plan(ring_fake):
+    payload = 512 * 1024
+    analytic = planner.plan(ring_fake, "all_to_all", ("d",), payload)
+    assert analytic.algorithm == "direct"
+    assert analytic.est_source == "analytic"
+    prof = _inverting_profile(ring_fake)
+    measured = planner.plan(ring_fake, "all_to_all", ("d",), payload,
+                            profile=prof)
+    assert measured.algorithm == "naive"            # the pick flipped
+    assert measured.est_source == "measured"
+    # the context form prices identically to the explicit kwarg
+    with planner.install_profile(prof):
+        assert planner.plan(ring_fake, "all_to_all", ("d",),
+                            payload).algorithm == "naive"
+    assert planner.active_profile() is None
+
+
+def test_measured_auto_dispatch_bit_identical(cube_ring8):
+    """Acceptance: with the inverting profile installed, algorithm="auto"
+    executes a different flow (naive instead of the direct cm ladder) on a
+    conformance cell, stays bit-identical to the oracle, and every emitted
+    CommEvent is measured-priced."""
+    comm = cube_ring8.comm("d")
+    rng = np.random.RandomState(7)
+    x = rng.randn(8, 2, 32).astype(np.float32)
+
+    with CommTrace() as tr0:
+        got0 = substrate.run_per_shard(
+            cube_ring8,
+            lambda v: comm.all_to_all(v, split_axis=2, concat_axis=2), x)
+    assert tr0.events[0].flow == "cm"               # analytic auto pick
+    assert tr0.events[0].est_source == "analytic"
+
+    prof = _inverting_profile(cube_ring8)
+    with planner.install_profile(prof), CommTrace() as tr:
+        got = substrate.run_per_shard(
+            cube_ring8,
+            lambda v: comm.all_to_all(v, split_axis=2, concat_axis=2), x)
+    assert [e.flow for e in tr.events] == ["naive"]  # the pick changed
+    assert all(e.est_source == "measured" for e in tr.events)
+    want = oracles.all_to_all(x, 1, (0,), split_axis=1, concat_axis=1)
+    np.testing.assert_array_equal(got, want)         # bit-identical
+    np.testing.assert_array_equal(got0, want)
+    s = tr.summary()
+    assert s["est_sources"] == {"measured": 1}
+    assert s["by_flow"]["all_to_all/naive"]["est_source"] == "measured"
+
+
+def test_measured_program_plan_and_execute(cube_ring8):
+    """The deferred path: plan_program under the inverting profile picks
+    naive for the recorded op, execution emits measured events, result is
+    bit-identical to the oracle."""
+    import jax
+    import jax.numpy as jnp
+    comm = cube_ring8.comm("d")
+    rng = np.random.RandomState(9)
+    x = rng.randn(8, 2, 32).astype(np.float32)
+    prof = _inverting_profile(cube_ring8)
+
+    prog = cube_ring8.program(name="tuned-aa")
+    with prog:
+        v = prog.input(jax.ShapeDtypeStruct((1, 2, 32), jnp.float32))
+        prog.output(comm.all_to_all(v, split_axis=2, concat_axis=2))
+
+    analytic = prog.lower()
+    a_est = next(iter(analytic.plan.estimates.values()))
+    assert a_est.algorithm == "direct" and a_est.est_source == "analytic"
+
+    with planner.install_profile(prof):
+        lowered = prog.lower()
+        m_est = next(iter(lowered.plan.estimates.values()))
+        assert m_est.algorithm == "naive"           # joint plan flipped too
+        assert m_est.est_source == "measured"
+        with CommTrace() as tr:
+            got = substrate.run_per_shard(
+                cube_ring8, lambda v: lowered.execute(v), x)
+    assert [e.flow for e in tr.events] == ["naive"]
+    assert all(e.est_source == "measured" for e in tr.events)
+    assert tr.events[0].program_id == "tuned-aa"
+    want = oracles.all_to_all(x, 1, (0,), split_axis=1, concat_axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ live tuning
+def test_tune_cache_and_measured_plan(tmp_path, cube_ring8):
+    """A real (tiny) sweep: tune -> persist -> reload under the same
+    fingerprint -> auto pricing is measured for covered flows."""
+    tuner = Tuner(cache_dir=tmp_path)
+    prof = tuner.tune(cube_ring8, sizes=(8192, 32768),
+                      primitives=("all_reduce", "all_gather"),
+                      reps=2, warmup=1)
+    assert os.path.exists(tuner.profile_path(cube_ring8))
+    assert any(k.startswith("naive/naive/") for k in prof.models)
+    # all sampled seconds are real wall times
+    assert all(s.seconds > 0 for s in prof.samples)
+
+    fresh = Tuner(cache_dir=tmp_path)               # new process analogue
+    reloaded = fresh.load(cube_ring8)
+    est = planner.plan(cube_ring8, "all_reduce", ("d",), 16384,
+                       profile=reloaded)
+    assert est.est_source == "measured"
+
+    # tuning again merges rather than discarding the first sweep
+    n0 = len(reloaded.samples)
+    prof2 = fresh.tune(cube_ring8, sizes=(16384,),
+                       primitives=("all_reduce",), reps=2, warmup=1)
+    assert len(prof2.samples) > 0 and len(prof2.samples) >= n0
+
+
+def test_select_exhaustive_fallback(tmp_path, cube_ring8):
+    """An under-sampled profile (n < MIN_SAMPLES) is low-confidence, so
+    select() measures the candidates at the requested size and persists
+    the new samples."""
+    tuner = Tuner(cache_dir=tmp_path)
+    # seed a deliberately under-sampled profile (one sample per flow)
+    seed = CommProfile(topology_fingerprint(cube_ring8), [
+        _sample(algorithm="naive", stage="naive", seconds=1e-3),
+        _sample(algorithm="direct", stage="im", seconds=2e-3),
+    ])
+    seed.save(tuner.profile_path(cube_ring8))
+    comm = cube_ring8.comm("d")
+    alg = tuner.select("all_reduce", 16384, comm, reps=2, warmup=1)
+    assert alg in ("naive", "pidcomm", "hierarchical")
+    grown = CommProfile.load(tuner.profile_path(cube_ring8))
+    assert len(grown.samples) > 2                   # measurements persisted
+
+
+def test_select_trusts_confident_profile(tmp_path, cube_ring8):
+    """With confident models covering every candidate, select() prices
+    without measuring (no new samples appear)."""
+    tuner = Tuner(cache_dir=tmp_path)
+    prof = _inverting_profile(cube_ring8)
+    prof.save(tuner.profile_path(cube_ring8))
+    comm = cube_ring8.comm("d")
+    assert tuner.select("all_to_all", 512 * 1024, comm) == "naive"
+    after = CommProfile.load(tuner.profile_path(cube_ring8))
+    assert len(after.samples) == 0                  # priced, not measured
+
+
+def test_partial_coverage_excludes_analytic_candidates():
+    """Measured CPU seconds and analytic v5e seconds are incomparable: on a
+    pod-crossing all_reduce the `direct` candidate can never be measured
+    (the dispatcher escalates it away), so with naive+hierarchical covered
+    the race must pick among the measured candidates -- not hand the win to
+    direct's incomparably-cheap analytic constants."""
+    pod = fake_cube((2, 2, 2), ("pod", "data", "model"),
+                    {"pod": 2, "dp": 2, "tp": 2})
+    slow_model = LinkModel(alpha=1e-3, beta=1e-8, n=8, r2=1.0)
+    prof = CommProfile(topology_fingerprint(pod), models={
+        "naive/naive/ici": slow_model, "naive/naive/dcn": slow_model,
+        "hierarchical/im/ici": slow_model,
+        "hierarchical/im/dcn": LinkModel(alpha=0.0, beta=1e-8, n=8, r2=1.0),
+    })
+    est = planner.plan(pod, "all_reduce", ("pod", "dp"), 1 << 20,
+                       profile=prof)
+    assert est.est_source == "measured"
+    assert est.algorithm in ("naive", "hierarchical")
