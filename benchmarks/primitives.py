@@ -17,6 +17,11 @@ from benchmarks._timing import bench, emit
 # per row: primitive, flow, stage, nbytes, measured_us, est_us, est_source.
 ROWS: list[dict] = []
 
+# Program-level trajectory rows (one per measured multi-op schedule):
+# name, ops, measured_us, plan_est_us (the overlap-aware joint budget),
+# serial_est_us, est_source (the ProgramPlan's provenance).
+PROGRAM_ROWS: list[dict] = []
+
 
 def _record_row(primitive: str, ev, us: float) -> None:
     if ev is None:
@@ -25,6 +30,16 @@ def _record_row(primitive: str, ev, us: float) -> None:
         "primitive": primitive, "flow": ev.flow, "stage": ev.stage,
         "nbytes": ev.payload_bytes, "measured_us": round(us, 2),
         "est_us": round(ev.seconds * 1e6, 3), "est_source": ev.est_source})
+
+
+def _record_program_row(name: str, lowered, us: float) -> None:
+    plan = lowered.plan
+    PROGRAM_ROWS.append({
+        "name": name, "ops": len(lowered.ops),
+        "measured_us": round(us, 2),
+        "plan_est_us": round(plan.seconds * 1e6, 3),
+        "serial_est_us": round(plan.serial_seconds * 1e6, 3),
+        "est_source": plan.est_source})
 
 
 def _setup(shape, names):
@@ -242,6 +257,7 @@ def program_fusion(size_kb: int = 512):
          f"events={len(tr.events)};flow={ev.flow}"
          f";fused_from={len(ev.fused_from)}"
          f";speedup_vs_eager={us_eager / us_fused:.2f}")
+    _record_program_row("rs_ag_fused", low, us_fused)
 
     grads_comm = cube.comm(("pod", "dp", "tp"))
 
@@ -264,6 +280,41 @@ def program_fusion(size_kb: int = 512):
                                *([jnp.ones((8, 4096), jnp.float32)] * 16)))
     emit("program/grad_sync/coalesced", us_coal,
          f"events=1;speedup_vs_per_leaf={us_leaf / us_coal:.2f}")
+    _record_program_row("grad_sync_coalesced", glow, us_coal)
+
+
+def program_overlap(size_kb: int = 256):
+    """Overlap-aware scheduling benchmark: a two-independent-op program
+    (all_reduce + all_gather on the 8-device ring) measured end to end
+    against its joint plan.  Under an installed overlap-tuned CommProfile
+    the plan's ``seconds`` budget and interleaving order are measured-
+    sourced; the emitted row carries plan vs serial vs wall time so the
+    trajectory tracks how well the interleaving model predicts reality."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    cube = _setup((8,), ("d",))
+    comm = cube.comm("d")
+    n = size_kb * 1024 // 4
+
+    prog = cube.program(name="bench-overlap")
+    with prog:
+        a = prog.input(jax.ShapeDtypeStruct((1, n), jnp.float32))
+        b = prog.input(jax.ShapeDtypeStruct((1, n), jnp.float32))
+        prog.output(comm.all_reduce(a), comm.all_gather(b, axis=1))
+    low = prog.lower()
+    spec = P("d", None)
+    x = jnp.ones((8, n), jnp.float32)
+    y = jnp.ones((8, n), jnp.float32)
+    from repro.tuning.microbench import measure_program
+    us = measure_program(cube, low, (x, y), (spec, spec),
+                         (spec, spec)) * 1e6
+    plan = low.plan
+    emit("program/overlap/ar_ag", us,
+         f"ops={len(low.ops)};plan_est_us={plan.seconds * 1e6:.1f}"
+         f";serial_est_us={plan.serial_seconds * 1e6:.1f}"
+         f";est_source={plan.est_source}")
+    _record_program_row("overlap_ar_ag", low, us)
 
 
 def run():
@@ -273,3 +324,4 @@ def run():
     fig20_cube_shapes()
     fig23_topologies()
     program_fusion()
+    program_overlap()

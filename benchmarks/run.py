@@ -6,21 +6,32 @@ Prints ``name,us_per_call,derived`` CSV lines. Runs on 8 real CPU devices
     PYTHONPATH=src python -m benchmarks.run [--only primitives|apps|roofline]
     PYTHONPATH=src python -m benchmarks.run --profile [--cache-dir DIR]
 
-Every run of the primitives section seeds the bench trajectory:
-``BENCH_primitives.json`` at the repo root, one row per measured cell
-(primitive, flow, stage, nbytes, measured_us, est_us, est_source).
+Every run of the primitives section seeds the bench trajectory at
+``--bench-json`` (default ``BENCH_primitives.json`` at the repo root): one
+row per measured primitive cell (primitive, flow, stage, nbytes,
+measured_us, est_us, est_source) plus a ``programs`` section of measured
+multi-op schedules (name, ops, measured_us, plan_est_us, serial_est_us,
+est_source).
 
 ``--profile`` exercises the tuning subsystem end to end: run the primitive
-sweep with analytic estimates, ``tune()`` on the live substrate, save the
+sweep with analytic estimates, ``tune()`` on the live substrate (per-op
+alpha-beta models AND program-level overlap factors), save the
 ``CommProfile`` into the cache dir, *reload it under the same topology
 fingerprint*, install it, and re-run the sweep -- the emitted
 ``profile/meas_over_est`` lines compare the median measurement/estimate
 ratio before and after calibration (the calibrated median must sit strictly
-closer to 1.0).
+closer to 1.0), and the program section re-runs under the installed profile
+so its joint plans are measured-sourced.
+
+``--check-against SEED`` is the CI regression gate: after the run, every
+(primitive, flow, nbytes) row of the fresh bench JSON is compared against
+SEED and the process exits non-zero when any row's best ``measured_us``
+regresses beyond ``--tolerance`` (default 2x -- CPU-substrate wall times
+are noisy; the gate catches order-of-magnitude breakage, not percent
+drift).
 """
 import argparse
 import json
-import os
 import statistics
 import sys
 
@@ -28,17 +39,35 @@ from benchmarks._timing import ensure_devices
 
 BENCH_JSON = "BENCH_primitives.json"
 
+SEED_RECIPE = """\
+bench-regression gate:
+  compare a fresh run against the committed seed (CI does this per matrix
+  leg; exits 1 on any >tolerance regression):
+      python -m benchmarks.run --profile --bench-json BENCH_fresh.json \\
+          --check-against BENCH_primitives.json
 
-def _write_bench_json(path: str, rows, extra: dict | None = None) -> None:
+seed refresh (after an intentional perf or schema change):
+      python -m benchmarks.run --profile --cache-dir .tuning-cache \\
+          --bench-json BENCH_primitives.json
+      git add BENCH_primitives.json   # commit the new trajectory seed
+"""
+
+
+def _write_bench_json(path: str, rows, programs=(), extra: dict | None = None
+                      ) -> None:
     doc = {"schema": ["primitive", "flow", "stage", "nbytes", "measured_us",
                       "est_us", "est_source"],
-           "rows": list(rows)}
+           "program_schema": ["name", "ops", "measured_us", "plan_est_us",
+                              "serial_est_us", "est_source"],
+           "rows": list(rows),
+           "programs": list(programs)}
     if extra:
         doc.update(extra)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {path} ({len(doc['rows'])} rows)", file=sys.stderr)
+    print(f"# wrote {path} ({len(doc['rows'])} rows, "
+          f"{len(doc['programs'])} programs)", file=sys.stderr)
 
 
 def _median_ratio(rows) -> float:
@@ -46,6 +75,50 @@ def _median_ratio(rows) -> float:
     ratios = [r["measured_us"] / r["est_us"] for r in rows
               if r.get("est_us", 0) > 0]
     return statistics.median(ratios) if ratios else float("nan")
+
+
+def _best_by_key(rows) -> dict:
+    """Best (minimum) measured_us per (primitive, flow, nbytes) -- several
+    algorithm requests can execute the same flow at the same size, and the
+    min damps single-run noise on both sides of the comparison."""
+    out: dict[tuple, float] = {}
+    for r in rows:
+        key = (r["primitive"], r["flow"], r["nbytes"])
+        us = float(r["measured_us"])
+        if key not in out or us < out[key]:
+            out[key] = us
+    return out
+
+
+def check_against(seed_path: str, fresh_path: str,
+                  tolerance: float = 2.0) -> list[str]:
+    """Compare a fresh bench JSON against the committed seed; returns the
+    list of regression descriptions (empty = gate passes).  Rows present in
+    the seed but missing from the fresh run are reported as warnings (a
+    coverage drop cannot "pass" silently) without failing the gate."""
+    with open(seed_path) as f:
+        seed = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    seed_best = _best_by_key(seed["rows"])
+    fresh_best = _best_by_key(fresh["rows"])
+    failures = []
+    for key, seed_us in sorted(seed_best.items()):
+        fresh_us = fresh_best.get(key)
+        tag = "/".join(str(k) for k in key)
+        if fresh_us is None:
+            print(f"# check-against: {tag} missing from fresh run "
+                  "(coverage dropped)", file=sys.stderr)
+            continue
+        if fresh_us > tolerance * seed_us:
+            failures.append(
+                f"{tag}: {fresh_us:.1f}us vs seed {seed_us:.1f}us "
+                f"(> {tolerance:g}x tolerance)")
+    new = sorted(set(fresh_best) - set(seed_best))
+    if new:
+        print(f"# check-against: {len(new)} new cells not in the seed "
+              "(refresh the seed to start tracking them)", file=sys.stderr)
+    return failures
 
 
 def profile_mode(cache_dir: str, out_json: str) -> None:
@@ -62,7 +135,7 @@ def profile_mode(cache_dir: str, out_json: str) -> None:
     analytic_rows = list(primitives.ROWS)
     med_analytic = _median_ratio(analytic_rows)
 
-    # 2. tune on the live substrate and persist
+    # 2. tune on the live substrate (per-op models + overlap) and persist
     tuner = Tuner(cache_dir=cache_dir)
     profile = tuner.tune(cube, sizes=(64 * 1024, 256 * 1024, 512 * 1024,
                                       1024 * 1024))
@@ -72,16 +145,21 @@ def profile_mode(cache_dir: str, out_json: str) -> None:
     # 3. reload under the same topology fingerprint (load() rejects drift)
     reloaded = tuner.load(cube)
 
-    # 4. calibrated sweep under the reloaded profile
+    # 4. calibrated sweep + program-level section under the reloaded
+    # profile: the joint plans (and their interleaving budgets) are priced
+    # from the measured models and overlap factors
     primitives.ROWS.clear()
+    primitives.PROGRAM_ROWS.clear()
     with planner.install_profile(reloaded):
         primitives.fig14_fig16_primitives()
+        primitives.program_fusion()
+        primitives.program_overlap()
     measured_rows = list(primitives.ROWS)
     med_measured = _median_ratio(measured_rows)
 
     emit_rows = analytic_rows + measured_rows
     closer = abs(med_measured - 1.0) < abs(med_analytic - 1.0)
-    _write_bench_json(out_json, emit_rows, extra={
+    _write_bench_json(out_json, emit_rows, primitives.PROGRAM_ROWS, extra={
         "median_meas_over_est": {"analytic": med_analytic,
                                  "measured": med_measured},
         "calibration_improved": closer,
@@ -95,34 +173,65 @@ def profile_mode(cache_dir: str, out_json: str) -> None:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=SEED_RECIPE)
     ap.add_argument("--only", default=None,
                     choices=["primitives", "apps", "roofline"])
     ap.add_argument("--profile", action="store_true",
                     help="tune -> save -> reload -> calibrated re-run of "
-                         "the primitive sweep")
+                         "the primitive sweep (incl. program-level overlap)")
     ap.add_argument("--cache-dir", default=".tuning-cache",
                     help="CommProfile cache directory for --profile")
     ap.add_argument("--bench-json", default=BENCH_JSON,
-                    help="bench-trajectory output path")
+                    help="bench-trajectory output path (never written "
+                         "anywhere else)")
+    ap.add_argument("--check-against", default=None, metavar="SEED",
+                    help="after the run, gate the fresh bench JSON against "
+                         "this committed seed; exit 1 on regression")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="check-against noise tolerance as a ratio "
+                         "(default 2.0 = fail when a row doubles)")
     args = ap.parse_args()
 
     ensure_devices(8)
 
     print("name,us_per_call,derived")
+    wrote_bench = False
     if args.profile:
         profile_mode(args.cache_dir, args.bench_json)
-        return
-    if args.only in (None, "primitives"):
-        from benchmarks import primitives
-        primitives.run()
-        _write_bench_json(args.bench_json, primitives.ROWS)
-    if args.only in (None, "apps"):
-        from benchmarks import apps
-        apps.run()
-    if args.only in (None, "roofline"):
-        from benchmarks import roofline
-        roofline.run()
+        wrote_bench = True
+    else:
+        if args.only in (None, "primitives"):
+            from benchmarks import primitives
+            primitives.run()
+            _write_bench_json(args.bench_json, primitives.ROWS,
+                              primitives.PROGRAM_ROWS)
+            wrote_bench = True
+        if args.only in (None, "apps"):
+            from benchmarks import apps
+            apps.run()
+        if args.only in (None, "roofline"):
+            from benchmarks import roofline
+            roofline.run()
+
+    if args.check_against:
+        if not wrote_bench:
+            print("# check-against requires a run that writes the bench "
+                  "JSON (primitives or --profile)", file=sys.stderr)
+            sys.exit(2)
+        failures = check_against(args.check_against, args.bench_json,
+                                 args.tolerance)
+        if failures:
+            print(f"# BENCH REGRESSION vs {args.check_against}:",
+                  file=sys.stderr)
+            for f in failures:
+                print(f"#   {f}", file=sys.stderr)
+            print("# intentional change? refresh the seed (see --help)",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"# check-against {args.check_against}: "
+              f"ok (tolerance {args.tolerance:g}x)", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -153,9 +153,49 @@ print("auto dispatch priced from the measured CommProfile "
       f"(flow {ttrace.events[0].flow}, "
       f"est {ttrace.events[0].seconds * 1e6:.1f}us measured)")
 
+# 8. overlap-aware program scheduling (measure -> fit -> plan, program
+#    level): the tune() above also ran the *overlap sweep* -- pairs of
+#    collectives dispatched back-to-back vs alone -- fitting per-domain-pair
+#    serialization factors into the profile.  With the profile installed,
+#    plan_program prices a multi-op program's interleaving order and its
+#    seconds-vs-serial budget from those measurements: the printed plan
+#    carries est_source=measured, closing the loop the per-op models left
+#    open.  Structurally identical recordings reuse one cached lowered
+#    schedule (the trainer's per-step grad sync rides this cache).
+from repro.core.program import LOWER_STATS  # noqa: E402
+
+print("overlap factors:",
+      {k: round(m.factor, 3) for k, m in prof.overlap.items()})
+
+def record_pair():
+    prog = cube.program(name="quickstart-overlap")
+    with prog:
+        a = prog.input(jax.ShapeDtypeStruct((1, 1, 1, 64), jnp.float32))
+        b = prog.input(jax.ShapeDtypeStruct((1, 1, 1, 64), jnp.float32))
+        prog.output(ar_y.all_reduce(a), aa_z.all_gather(b, axis=3))
+    return prog
+
+with install_profile(prof):
+    lowered_pair = record_pair().lower()
+    stats0 = dict(LOWER_STATS)
+    record_pair().lower()                   # identical structure: cache hit
+print(lowered_pair.describe())
+plan = lowered_pair.plan
+assert plan.est_source == "measured"
+assert plan.seconds <= plan.serial_seconds + 1e-12
+assert LOWER_STATS["cache_hits"] > stats0["cache_hits"]
+print(f"overlap-aware plan: {plan.seconds*1e6:.1f}us vs serial "
+      f"{plan.serial_seconds*1e6:.1f}us (est_source={plan.est_source}); "
+      "re-recording reused the cached lowered program")
+
 import json, os  # noqa: E402
 if os.environ.get("QUICKSTART_SUMMARY"):
     with open(os.environ["QUICKSTART_SUMMARY"], "w") as f:
         json.dump({"eager": trace.summary(), "program": summary,
-                   "tuned": tuned_summary}, f, indent=1)
+                   "tuned": tuned_summary,
+                   "overlap_plan": {
+                       "seconds": plan.seconds,
+                       "serial_seconds": plan.serial_seconds,
+                       "est_source": plan.est_source,
+                       "order": list(plan.order)}}, f, indent=1)
     print("wrote", os.environ["QUICKSTART_SUMMARY"])

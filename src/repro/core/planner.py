@@ -211,14 +211,24 @@ class ProgramOpSpec:
 class ProgramPlan:
     """Joint plan for a whole program: per-op estimates under one shared
     ICI/DCN budget, an explicit interleaving order for independent ops, and
-    the overlapped vs serial time bounds."""
+    the overlapped vs serial time bounds.
+
+    ``est_source`` is the plan-level provenance: ``"measured"`` when every
+    per-op estimate came from a profile's fitted models AND the
+    interleaving budget was priced from its measured overlap factors (a
+    single-op wave has no interleaving to price, so all-singleton programs
+    only need the op models); ``"mixed"`` when measurement covered part of
+    the pricing -- including the previously-unclosable case of measured
+    per-op seconds under the *analytic* interleaving model; ``"analytic"``
+    otherwise."""
     estimates: Mapping[int, CommEstimate]
     order: tuple[int, ...]             # dependency-safe dispatch order
     levels: tuple[tuple[int, ...], ...]  # independent-op waves
     ici_bytes: float
     dcn_bytes: float
-    seconds: float                     # per-level max(ICI budget, DCN budget)
+    seconds: float                     # overlap-aware whole-program time
     serial_seconds: float              # sum of per-op estimates
+    est_source: str = "analytic"       # "analytic" | "mixed" | "measured"
 
 
 # planner algorithm to estimate for an explicitly requested dispatch
@@ -229,6 +239,45 @@ _REQUEST_TO_PLANNER = {
     "hierarchical": "pidcomm",
     "compressed": "compressed",
 }
+
+
+def _wave_order_seconds(order, est: Mapping[int, CommEstimate],
+                        factor_of) -> tuple[float, int, int]:
+    """Price one candidate dispatch order of independent ops under the
+    adjacent-pair overlap model: ops issue in sequence, and each adjacent
+    pair (a, b) hides ``(1 - f(dom_a, dom_b)) * min(sec_a, sec_b)`` of the
+    smaller op's time, where f is the measured serialization factor of the
+    *ordered* domain pair.  Unmeasured pairs fall back to the analytic
+    assumption (cross-domain links stream concurrently, f=0; same-domain
+    dispatches serialize on the link, f=1).  An op's time can only be
+    hidden once: the credit attributed to the smaller member of each pair
+    is capped by what that op has left to hide, so a short op flanked by
+    two long neighbours is not subtracted twice.  Returns
+    (seconds, measured_pairs, total_pairs) for this order."""
+    total = sum(est[i].seconds for i in order)
+    measured = 0
+    left = {i: est[i].seconds for i in order}
+    for a, b in zip(order, order[1:]):
+        da, db = est[a].dominant(), est[b].dominant()
+        f = factor_of(da, db)
+        if f is None:
+            f = 0.0 if da != db else 1.0
+        else:
+            measured += 1
+        small = a if est[a].seconds <= est[b].seconds else b
+        credit = min((1.0 - f) * min(est[a].seconds, est[b].seconds),
+                     left[small])
+        left[small] -= credit
+        total -= credit
+    return (max(total, max(est[i].seconds for i in order)),
+            measured, len(order) - 1)
+
+
+def _alternate(first, second):
+    out = []
+    for pair in itertools.zip_longest(first, second):
+        out += [i for i in pair if i is not None]
+    return out
 
 
 def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
@@ -242,7 +291,14 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
     two domain budgets (plus any op that exceeds both alone).
 
     ``profile`` (or an :func:`install_profile` context) prices every op
-    from measured models where covered, like :func:`plan`.
+    from measured models where covered, like :func:`plan`.  A profile with
+    an ``overlap`` section additionally replaces the analytic interleaving
+    model: candidate dispatch orders for each wave (domain-alternating both
+    ways, domain-grouped both ways, longest-first) race under the measured
+    ordered-pair serialization factors (:func:`_wave_order_seconds`), so
+    both the chosen order and the ``seconds``-vs-``serial_seconds`` budget
+    are priced from data -- the plan's ``est_source`` says how much of the
+    pricing was measured.
     """
     est: dict[int, CommEstimate] = {}
     for o in ops:
@@ -272,35 +328,82 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
                 cube, o.primitive, o.dims, o.payload_bytes, alg,
                 profile=profile)
 
+    prof = profile if profile is not None else active_profile()
+    factor_of = getattr(prof, "overlap_factor", None) \
+        if prof is not None and getattr(prof, "has_overlap", False) else None
+
     # dependency levels (wave l = ops whose deps all sit in waves < l)
     level_of: dict[int, int] = {}
     remaining = {o.op_id: o for o in ops}
     levels: list[tuple[int, ...]] = []
+    seconds = 0.0
+    pairs_measured = pairs_total = 0
     while remaining:
         wave = [oid for oid, o in remaining.items()
                 if all(d in level_of or d not in est for d in o.deps)]
         if not wave:
             raise ValueError("cyclic dependencies in program ops")
-        # explicit interleaving: alternate DCN-dominant and ICI-dominant ops
-        # (longest first within each domain) so neither link sits idle
+        # analytic interleaving: alternate DCN-dominant and ICI-dominant
+        # ops (longest first within each domain) so neither link sits idle
         dcn = sorted((oid for oid in wave if est[oid].dominant() == "dcn"),
                      key=lambda i: -est[i].seconds)
         ici = sorted((oid for oid in wave if est[oid].dominant() == "ici"),
                      key=lambda i: -est[i].seconds)
-        inter = []
-        for pair in itertools.zip_longest(dcn, ici):
-            inter += [i for i in pair if i is not None]
-        levels.append(tuple(inter))
-        for oid in inter:
+        inter = _alternate(dcn, ici)
+        priced = None
+        if factor_of is not None:
+            # measured interleaving: race candidate orders under the
+            # profile's ordered-pair factors; first candidate wins ties so
+            # the analytic alternation stays the default shape
+            cands, seen = [], set()
+            for c in (inter, _alternate(ici, dcn), dcn + ici, ici + dcn,
+                      sorted(wave, key=lambda i: -est[i].seconds)):
+                t = tuple(c)
+                if t not in seen:
+                    seen.add(t)
+                    cands.append(t)
+            priced = [_wave_order_seconds(c, est, factor_of) for c in cands]
+            # when the winning order owes nothing to a measured factor,
+            # keep the legacy analytic budget below: est_source="analytic"
+            # must always denote the same seconds formula (the pairwise
+            # fallback model is only a vehicle for measured factors,
+            # never a reformulation of the analytic one)
+            if priced[min(range(len(priced)),
+                          key=lambda k: priced[k][0])][1] == 0:
+                priced = None
+        if priced is None:
+            # analytic budget: both links stream concurrently; any single
+            # op slower than either link budget bounds the wave
+            ici_t = sum(est[i].ici_bytes / ICI_BW for i in wave)
+            dcn_t = sum(est[i].dcn_bytes / DCN_BW for i in wave)
+            slowest = max(est[i].seconds for i in wave)
+            wave_s = max(ici_t, dcn_t, slowest)
+            chosen = inter
+            pairs_total += len(wave) - 1
+        else:
+            best = min(range(len(priced)), key=lambda k: priced[k][0])
+            wave_s, n_meas, n_pairs = priced[best]
+            chosen = cands[best]
+            pairs_measured += n_meas
+            pairs_total += n_pairs
+        seconds += wave_s
+        levels.append(tuple(chosen))
+        for oid in chosen:
             level_of[oid] = len(levels) - 1
             del remaining[oid]
 
-    seconds = 0.0
-    for wave in levels:
-        ici_t = sum(est[i].ici_bytes / ICI_BW for i in wave)
-        dcn_t = sum(est[i].dcn_bytes / DCN_BW for i in wave)
-        slowest = max(est[i].seconds for i in wave)
-        seconds += max(ici_t, dcn_t, slowest)
+    n_measured = sum(e.est_source == "measured" for e in est.values())
+    # "measured" demands every adjacent pair of every wave's chosen order
+    # was priced from a measured factor (vacuously true for all-singleton
+    # programs, where there is no interleaving to price); partial pair
+    # coverage -- or the analytic interleaving model -- is "mixed"
+    overlap_full = pairs_measured == pairs_total
+    if n_measured == 0 and pairs_measured == 0:
+        src = "analytic"
+    elif n_measured == len(est) and overlap_full:
+        src = "measured"
+    else:
+        src = "mixed"
     return ProgramPlan(
         estimates=est,
         order=tuple(oid for wave in levels for oid in wave),
@@ -308,7 +411,8 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
         ici_bytes=sum(e.ici_bytes for e in est.values()),
         dcn_bytes=sum(e.dcn_bytes for e in est.values()),
         seconds=seconds,
-        serial_seconds=sum(e.seconds for e in est.values()))
+        serial_seconds=sum(e.seconds for e in est.values()),
+        est_source=src)
 
 
 def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,

@@ -40,11 +40,20 @@ each call in isolation; this module adds the whole-program surface:
 Eager single-op calls remain supported -- a one-op program executes the
 identical registry body, so the conformance matrix is bit-identical through
 both paths (tests/test_program.py).
+
+Repeated recordings with identical op structure (the trainer's per-step
+gradient sync, any re-traced ``comm.program()`` scope) reuse one cached
+lowered schedule -- rewrite passes, coalescing buckets and the joint plan
+run once per structural fingerprint, not once per program instance (see
+``_LOWER_CACHE`` / ``LOWER_STATS``).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
+import weakref
 from typing import Any, Sequence
 
 import jax
@@ -57,6 +66,62 @@ from repro.core import planner
 DEFAULT_COALESCE_BYTES = 1 << 20
 
 _PROGRAM_IDS = itertools.count()
+
+# -------------------------------------------------- cross-program reuse
+# Two programs with the same *structure* (op graph, avals, input/output
+# wiring) lower to the same optimized schedule, so re-lowering every
+# instance -- the trainer records a fresh grad-sync program each traced
+# step -- redoes identical rewrite passes, bucket construction and joint
+# planning.  ``lower()`` therefore consults a cache keyed by the program's
+# structural fingerprint plus everything else that shapes the result: the
+# lowering knobs and the installed profile's content token (a plan priced
+# under one profile must not serve another).  A hit rebinds the cached
+# schedule to the new program, so its constants (e.g. the fresh step's
+# gradient tracers) are picked up at execution while the ops, coalescing
+# buckets and ProgramPlan are reused verbatim.
+#
+# Lifetime: cached entries hold *program-less* LoweredPrograms (retaining
+# the recording program would pin its captured constants -- per-trace
+# gradient tracers, arbitrary arrays -- indefinitely), and the cache dict
+# itself lives ON the cube object rather than in a module global: the
+# cached ops reference the cube through their communicators anyway, so a
+# module-level cache would pin every cube ever lowered against; attached
+# to the cube, a discarded cube and its schedules form an internal cycle
+# the garbage collector reclaims together.
+_LOWER_CACHE_MAX = 256
+_CACHED_CUBES: weakref.WeakSet = weakref.WeakSet()
+
+# observability: how many schedules were actually built vs reused (dryrun
+# records the per-cell delta; tests assert reuse strictly reduces work)
+LOWER_STATS = {"lowered": 0, "cache_hits": 0}
+
+
+def _cube_lower_cache(cube) -> dict:
+    cache = getattr(cube, "_lower_cache", None)
+    if cache is None:
+        cache = {}
+        # Hypercube is a frozen dataclass; attach the mutable cache the
+        # same way frozen __init__ does
+        object.__setattr__(cube, "_lower_cache", cache)
+        _CACHED_CUBES.add(cube)
+    return cache
+
+
+def clear_lower_cache() -> None:
+    for cube in list(_CACHED_CUBES):
+        getattr(cube, "_lower_cache", {}).clear()
+
+
+def _profile_token() -> str | None:
+    """Cache-key component for the installed profile; None disables
+    caching entirely -- a duck-typed profile without a content ``token()``
+    has no alias-safe identity (``id()`` can be recycled after GC and
+    would silently serve a plan priced under a dead profile)."""
+    prof = planner.active_profile()
+    if prof is None:
+        return "analytic"
+    tok = getattr(prof, "token", None)
+    return tok() if callable(tok) else None
 
 # Stack of CommPrograms currently recording.  ``Communicator._dispatch``
 # consults :func:`active_program` on every call; execution temporarily
@@ -302,10 +367,32 @@ class CommProgram:
         return tuple(v for o in self._ops for v in o.out_vids
                      if v not in consumed)
 
+    def structural_fingerprint(self) -> str:
+        """Stable hash of everything the lowering pipeline reads from this
+        program *except* constant values: the op graph (primitive, dims,
+        algorithm, reducer, kwargs, SSA wiring), every value's aval, and
+        the input/output declarations.  Two programs with equal
+        fingerprints lower to interchangeable schedules, which is what
+        keys cross-program reuse (the trainer's per-step grad-sync records
+        fresh tracers as constants, but the structure never changes)."""
+        blob = json.dumps({
+            "avals": [(list(a.shape), np.dtype(a.dtype).str)
+                      for a in self._avals],
+            "consts": sorted(self._consts),
+            "inputs": self._input_vids,
+            "outputs": list(self._default_outputs()),
+            "ops": [(o.primitive, list(o.comm.dims), o.algorithm, o.op,
+                     sorted(o.kwargs.items()), list(o.in_vids),
+                     list(o.out_vids))
+                    for o in self._ops],
+        }, sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()
+
     def lower(self, *, fuse: bool = True, coalesce: bool = True,
               coalesce_bytes: int = DEFAULT_COALESCE_BYTES,
               split_all_reduce: str | bool = "cost",
-              merge_a2a: bool = True) -> "LoweredProgram":
+              merge_a2a: bool = True, reuse: bool = True
+              ) -> "LoweredProgram":
         """Optimize + jointly plan the recorded ops.
 
         ``split_all_reduce``: ``False`` never rewrites, ``True`` always
@@ -317,11 +404,27 @@ class CommProgram:
         ``merge_a2a``: merge consecutive all_to_all ops over disjoint
         hypercube dims into one jointly-planned multi-dim chain op (§VII
         DLRM pattern); execution stays the bit-identical sequential chain.
+
+        ``reuse``: consult the cross-program lower cache -- a structurally
+        identical program lowered earlier (same cube, same knobs, same
+        installed profile) hands back its schedule rebound to this
+        program's constants instead of re-running the passes.
         """
         if self._open:
             raise RuntimeError(
                 f"{self.program_id} is still recording; lower() after the "
                 "with-block closes")
+        key = cache = None
+        token = _profile_token() if reuse else None
+        if reuse and token is not None:
+            cache = _cube_lower_cache(self.cube)
+            key = (self.structural_fingerprint(), fuse, coalesce,
+                   coalesce_bytes, str(split_all_reduce), merge_a2a, token)
+            hit = cache.get(key)
+            if hit is not None:
+                LOWER_STATS["cache_hits"] += 1
+                return dataclasses.replace(hit, program=self)
+        LOWER_STATS["lowered"] += 1
         ops = [dataclasses.replace(o) for o in self._ops]
         out_vids = self._default_outputs()
         if fuse:
@@ -347,8 +450,13 @@ class CommProgram:
             for o in ops])
         order = {oid: i for i, oid in enumerate(plan.order)}
         ops = sorted(ops, key=lambda o: order[o.op_id])
-        return LoweredProgram(program=self, ops=tuple(ops), plan=plan,
-                              out_vids=out_vids)
+        lowered = LoweredProgram(program=self, ops=tuple(ops), plan=plan,
+                                 out_vids=out_vids)
+        if key is not None:
+            if len(cache) >= _LOWER_CACHE_MAX:
+                cache.pop(next(iter(cache)))
+            cache[key] = dataclasses.replace(lowered, program=None)
+        return lowered
 
     # ------------------------------------------------------------ execution
     def _lowered_default(self) -> "LoweredProgram":
@@ -606,7 +714,8 @@ class LoweredProgram:
     def describe(self) -> str:
         lines = [f"LoweredProgram[{self.program.program_id} "
                  f"ops={len(self.ops)} est={self.plan.seconds * 1e6:.2f}us "
-                 f"(serial {self.plan.serial_seconds * 1e6:.2f}us)]"]
+                 f"(serial {self.plan.serial_seconds * 1e6:.2f}us, "
+                 f"est_source={self.plan.est_source})]"]
         lines += ["  " + o.describe(self.program) for o in self.ops]
         return "\n".join(lines)
 
@@ -715,6 +824,6 @@ class ProgramExecution:
 
 __all__ = [
     "CommFuture", "CommOp", "CommProgram", "LoweredProgram",
-    "ProgramExecution", "ProgramValue", "DEFAULT_COALESCE_BYTES",
-    "active_program",
+    "LOWER_STATS", "ProgramExecution", "ProgramValue",
+    "DEFAULT_COALESCE_BYTES", "active_program", "clear_lower_cache",
 ]

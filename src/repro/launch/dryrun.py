@@ -215,6 +215,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
     # the planned schedule of every communicator call site (one event per
     # textual site; scanned layers trace once).
     trace = CommTrace()
+    from repro.core import program as program_mod
+    lower_stats0 = dict(program_mod.LOWER_STATS)
     if shape["kind"] == "train":
         topo = build_topology(cfg, mesh, global_batch=shape["batch"])
         tc = TrainConfig()
@@ -267,6 +269,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
     # estimate provenance: which cost model priced this cell's schedule
     # ("analytic" constants vs an installed measured CommProfile)
     rec["est_sources"] = rec["comm_trace"].get("est_sources", {})
+    # deferred-program reuse during this cell's trace: schedules built vs
+    # served from the cross-program lower cache (grad-sync reuse shows up
+    # here when a cell traces the same program structure more than once)
+    rec["program_cache"] = {
+        k: program_mod.LOWER_STATS[k] - lower_stats0[k]
+        for k in program_mod.LOWER_STATS}
     rec["lower_s"] = round(time.monotonic() - t0, 1)
 
     t1 = time.monotonic()

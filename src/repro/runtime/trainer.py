@@ -96,7 +96,12 @@ def sync_replicated_grads(grads, specs, cube, *, compress_pod: bool = False,
     all-reduces into bucketed dispatches and jointly plans the schedule, so
     a trainer with dozens of replicated leaves issues a handful of
     collectives instead of one per leaf -- bit-identically, since a psum of
-    concatenated leaves equals the concatenation of per-leaf psums.  Every
+    concatenated leaves equals the concatenation of per-leaf psums.  The
+    recorded structure is identical every step (only the captured gradient
+    tracers change), so the program lower cache
+    (:mod:`repro.core.program` ``LOWER_STATS``) hands every sync after the
+    first its already-built buckets and joint plan -- re-tracing does not
+    re-run the rewrite passes.  Every
     dispatch still runs ``algorithm="auto"`` through the registry (a
     pod-crossing gradient sum executes the planner's hierarchical §IX-A
     pick) and is recorded by any active CommTrace with program provenance.

@@ -3,16 +3,20 @@
 # as fingerprint-keyed CommProfiles, and let the planner price candidates
 # from measured data (`planner.install_profile` / `algorithm="auto"`).
 from repro.tuning.profile import (
-    SCHEMA_VERSION, CommProfile, LinkModel, MeasuredSample,
-    ProfileMismatchError, fingerprint_key, fit_models, topology_fingerprint)
+    SCHEMA_VERSION, CommProfile, LinkModel, MeasuredSample, OverlapModel,
+    OverlapSample, ProfileMismatchError, fingerprint_key, fit_models,
+    fit_overlap, overlap_key, topology_fingerprint)
 from repro.tuning.microbench import (
-    DEFAULT_SIZES, measure_cell, sweep)
+    DEFAULT_OVERLAP_SIZES, DEFAULT_SIZES, measure_cell,
+    measure_overlap_pair, measure_program, overlap_sweep, sweep)
 from repro.tuning.tuner import DEFAULT_CACHE_DIR, Tuner
 
 __all__ = [
     "SCHEMA_VERSION", "CommProfile", "LinkModel", "MeasuredSample",
-    "ProfileMismatchError", "fingerprint_key", "fit_models",
+    "OverlapModel", "OverlapSample", "ProfileMismatchError",
+    "fingerprint_key", "fit_models", "fit_overlap", "overlap_key",
     "topology_fingerprint",
-    "DEFAULT_SIZES", "measure_cell", "sweep",
+    "DEFAULT_OVERLAP_SIZES", "DEFAULT_SIZES", "measure_cell",
+    "measure_overlap_pair", "measure_program", "overlap_sweep", "sweep",
     "DEFAULT_CACHE_DIR", "Tuner",
 ]

@@ -17,6 +17,16 @@ Candidate set per cell mirrors :func:`repro.core.planner.plan`'s race:
 ``naive`` and ``direct`` everywhere, plus ``hierarchical`` for additive
 all-reduces whose group spans both domains (where the dispatcher escalates
 ``direct`` away, it is skipped rather than mis-measured).
+
+Program-level cells (the overlap sweep) measure *schedules* rather than
+single ops: :func:`measure_overlap_pair` times two independent collectives
+dispatched back-to-back inside one compiled schedule against each op alone,
+yielding an :class:`~repro.tuning.profile.OverlapSample` whose implied
+serialization factor (0 = the smaller op hides entirely, 1 = fully serial)
+is what ``planner.plan_program`` needs to price an interleaving order from
+data instead of the analytic both-links-stream assumption.
+:func:`measure_program` is the end-to-end analogue for a whole lowered
+``CommProgram`` (used by the benchmark harness to validate joint plans).
 """
 from __future__ import annotations
 
@@ -25,7 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.tuning.profile import MeasuredSample
+from repro.tuning.profile import MeasuredSample, OverlapSample
 
 # Sweep defaults: payload sizes (per-device bytes) chosen to straddle the
 # latency- and bandwidth-dominated regimes on the CPU substrate without
@@ -161,6 +171,131 @@ def measure_cell(cube, primitive: str, dims, nbytes: int,
     return samples
 
 
+# ------------------------------------------------- program-level overlap
+# Overlap cells default to one mid-range payload: the serialization factor
+# is a ratio of same-size runs, so it is far less size-sensitive than the
+# alpha-beta terms (two sizes still give the median fit a noise anchor).
+DEFAULT_OVERLAP_SIZES = (256 * 1024, 1024 * 1024)
+
+
+def _domain_comms(cube) -> dict:
+    """One communicator per link domain of the cube: ``"ici"`` over the
+    fast dims, ``"dcn"`` over the pod-crossing dims (when present).  An
+    all_reduce over each is the domain's representative flow -- its
+    analytic ``dominant()`` matches the key by construction."""
+    fast = tuple(d for d in cube.dim_names if d not in cube.dcn_dims)
+    out = {}
+    if fast:
+        out["ici"] = cube.comm(fast)
+    if cube.dcn_dims:
+        out["dcn"] = cube.comm(tuple(cube.dcn_dims))
+    return out
+
+
+def _overlap_payload_elems(nbytes: int) -> int:
+    """Per-device fp32 elements of one overlap-cell payload (all_reduce
+    needs no divisibility, so the size is shared by every pair at this
+    nbytes -- which is what lets solo timings be hoisted per domain)."""
+    return max(int(nbytes) // 4, 1)
+
+
+def _solo_seconds(cube, comm, n: int, *, reps: int, warmup: int) -> float:
+    """Measured seconds of one domain-representative all_reduce alone."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    spec = P(*cube.dim_names, None)
+    x = jnp.ones(tuple(cube.dim_sizes) + (n,), jnp.float32)
+    call = _smap_call(cube, lambda v: comm.all_reduce(v), (spec,), spec, x)
+    return _bench(call, warmup=warmup, reps=reps) * 1e-6
+
+
+def _pair_seconds(cube, comm_a, comm_b, n: int, *,
+                  reps: int, warmup: int) -> float:
+    """Measured seconds of A-then-B in one compiled schedule: A dispatches
+    textually before B inside one jitted shard_map, so the module sees
+    exactly the ordered two-op program the planner would emit."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    spec = P(*cube.dim_names, None)
+    x = jnp.ones(tuple(cube.dim_sizes) + (n,), jnp.float32)
+    y = jnp.ones(tuple(cube.dim_sizes) + (n,), jnp.float32) * 2.0
+
+    def pair(u, v):
+        ra = comm_a.all_reduce(u)
+        rb = comm_b.all_reduce(v)
+        return ra, rb
+
+    call = _smap_call(cube, pair, (spec, spec), (spec, spec), x, y)
+    return _bench(call, warmup=warmup, reps=reps) * 1e-6
+
+
+def measure_overlap_pair(cube, dom_a: str, dom_b: str, nbytes: int, *,
+                         reps: int = 5, warmup: int = 2,
+                         solo: dict | None = None) -> OverlapSample | None:
+    """Measure one ordered domain pair; None when the cube lacks a domain
+    (a single-pod cube has no DCN leg to overlap).  ``solo`` optionally
+    supplies pre-measured {domain: seconds} at this payload size so a
+    sweep benches each domain's solo op once, not once per pair."""
+    comms = _domain_comms(cube)
+    if dom_a not in comms or dom_b not in comms:
+        return None
+    comm_a, comm_b = comms[dom_a], comms[dom_b]
+    n = _overlap_payload_elems(nbytes)
+    solo = solo or {}
+    sec_a = solo.get(dom_a)
+    if sec_a is None:
+        sec_a = _solo_seconds(cube, comm_a, n, reps=reps, warmup=warmup)
+    sec_b = solo.get(dom_b)
+    if sec_b is None:
+        sec_b = _solo_seconds(cube, comm_b, n, reps=reps, warmup=warmup)
+    sec_pair = _pair_seconds(cube, comm_a, comm_b, n,
+                             reps=reps, warmup=warmup)
+    return OverlapSample(
+        dom_a=dom_a, dom_b=dom_b,
+        primitive_a="all_reduce", primitive_b="all_reduce",
+        bitmap_a=comm_a.bitmap, bitmap_b=comm_b.bitmap,
+        nbytes=4 * n, seconds_a=sec_a, seconds_b=sec_b,
+        seconds_pair=sec_pair)
+
+
+def overlap_sweep(cube, *, sizes: Sequence[int] = DEFAULT_OVERLAP_SIZES,
+                  reps: int = 5, warmup: int = 2,
+                  progress=None) -> list[OverlapSample]:
+    """Every ordered domain pair the cube can express, at each size.  On a
+    single-domain cube that is just ("ici", "ici"); a pod-crossing cube
+    adds the cross-domain pairs whose factors decide the interleaving.
+    Solo ops are benchmarked once per (domain, size) and shared across the
+    ordered pairs."""
+    comms = _domain_comms(cube)
+    domains = tuple(comms)
+    samples: list[OverlapSample] = []
+    for nbytes in sizes:
+        n = _overlap_payload_elems(nbytes)
+        solo = {d: _solo_seconds(cube, comms[d], n, reps=reps,
+                                 warmup=warmup) for d in domains}
+        for dom_a in domains:
+            for dom_b in domains:
+                s = measure_overlap_pair(cube, dom_a, dom_b, nbytes,
+                                         reps=reps, warmup=warmup,
+                                         solo=solo)
+                if s is None:
+                    continue
+                samples.append(s)
+                if progress is not None:
+                    progress(dom_a, dom_b, nbytes, s)
+    return samples
+
+
+def measure_program(cube, lowered, global_inputs, in_specs, out_specs, *,
+                    reps: int = 5, warmup: int = 2) -> float:
+    """End-to-end seconds of one lowered ``CommProgram`` schedule executed
+    through a jitted shard_map over the cube's mesh -- the measurement the
+    joint plan's ``seconds`` is validated against."""
+    call = _smap_call(cube, lambda *vs: lowered.execute(*vs),
+                      in_specs, out_specs, *global_inputs)
+    return _bench(call, warmup=warmup, reps=reps) * 1e-6
+
+
 def sweep(cube, *, sizes: Sequence[int] = DEFAULT_SIZES,
           primitives: Sequence[str] | None = None,
           reps: int = 5, warmup: int = 2,
@@ -187,5 +322,6 @@ def sweep(cube, *, sizes: Sequence[int] = DEFAULT_SIZES,
     return samples
 
 
-__all__ = ["DEFAULT_SIZES", "PE_PRIMITIVES", "ROOTED_PRIMITIVES",
-           "measure_cell", "sweep"]
+__all__ = ["DEFAULT_OVERLAP_SIZES", "DEFAULT_SIZES", "PE_PRIMITIVES",
+           "ROOTED_PRIMITIVES", "measure_cell", "measure_overlap_pair",
+           "measure_program", "overlap_sweep", "sweep"]

@@ -17,13 +17,25 @@ curve, not a validation".  This module closes the measure->fit->plan loop:
       counts stay analytic (they are properties of the flow, not of the
       hardware); only the time-per-byte and fixed-latency terms are fitted.
 
+  overlap factors
+      program-level measurements (schema v2): ordered domain-pair
+      serialization factors fitted from :func:`repro.tuning.microbench.
+      overlap_sweep` observations.  ``factor("ici", "dcn")`` answers "when
+      an ICI-dominant op is dispatched immediately before a DCN-dominant
+      one, what fraction of the smaller op's time is *not* hidden?" --
+      0.0 is perfect overlap, 1.0 fully serial.  ``planner.plan_program``
+      prices its interleaving order and shared budget from these factors
+      when the profile covers them, closing the last analytic island in
+      the measure->fit->plan loop (per-op ``seconds`` were measured
+      already; the interleaving model was not).
+
   CommProfile
       a versioned, JSON-persistable bundle of fingerprint + samples +
-      models.  The topology fingerprint (device count, hypercube shape, pod
-      split, jax version) keys the profile: loading against a different
-      topology is rejected with a retune recipe, and profiles for the same
-      fingerprint merge (union of samples, refit) so partial sweeps
-      accumulate.
+      models (+ overlap).  The topology fingerprint (device count,
+      hypercube shape, pod split, jax version) keys the profile: loading
+      against a different topology is rejected with a retune recipe, and
+      profiles for the same fingerprint merge (union of samples, refit) so
+      partial sweeps accumulate.
 
 A profile is consumed by :func:`repro.core.planner.install_profile` /
 the ``profile=`` kwargs of ``plan()``/``estimate()``/``plan_program()``:
@@ -41,9 +53,12 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-# Bump whenever the JSON layout changes incompatibly; load() rejects other
-# versions with a retune recipe rather than mis-reading old files.
-SCHEMA_VERSION = 1
+# Bump whenever the JSON layout changes incompatibly; load() rejects newer
+# versions with a retune recipe rather than mis-reading them.  Older
+# versions with a defined migration load in place: v1 (pre-overlap) files
+# are valid v2 profiles with an empty overlap section.
+SCHEMA_VERSION = 2
+_MIGRATABLE_VERSIONS = (1, 2)
 
 # A fit is trusted ("confident") when it has at least this many samples and
 # explains at least this fraction of the variance; below either bound the
@@ -116,6 +131,75 @@ class LinkModel:
     @staticmethod
     def from_json(d: Mapping) -> "LinkModel":
         return LinkModel(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSample:
+    """One program-level overlap observation: op A dispatched immediately
+    before op B inside one compiled schedule, against each op timed alone.
+
+    ``dom_a``/``dom_b`` are the analytic dominant domains ("ici"/"dcn") of
+    the two flows -- the key the fitted factor generalizes over; the
+    primitive/bitmap fields are provenance for debugging a bad fit."""
+    dom_a: str
+    dom_b: str
+    primitive_a: str
+    primitive_b: str
+    bitmap_a: str
+    bitmap_b: str
+    nbytes: int             # per-device payload of each op
+    seconds_a: float        # measured, op A alone
+    seconds_b: float        # measured, op B alone
+    seconds_pair: float     # measured, A-then-B in one schedule
+
+    def factor(self) -> float:
+        """Serialization fraction in [0, 1] implied by this observation:
+        ``pair ~= max(a, b) + factor * min(a, b)`` -- 0 is perfect overlap
+        (the smaller op hides entirely), 1 is fully serial."""
+        lo = min(self.seconds_a, self.seconds_b)
+        hi = max(self.seconds_a, self.seconds_b)
+        if lo <= 0.0:
+            return 1.0
+        return float(np.clip((self.seconds_pair - hi) / lo, 0.0, 1.0))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Mapping) -> "OverlapSample":
+        return OverlapSample(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapModel:
+    """Fitted serialization factor for one *ordered* domain pair
+    (``"{dom_a}->{dom_b}"``): the median of the observations' implied
+    factors (median, not mean -- single-run wall times on a shared host
+    have heavy-tailed noise)."""
+    factor: float           # [0, 1]: 0 = perfect overlap, 1 = serial
+    n: int                  # observations behind the fit
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Mapping) -> "OverlapModel":
+        return OverlapModel(**d)
+
+
+def overlap_key(dom_a: str, dom_b: str) -> str:
+    return f"{dom_a}->{dom_b}"
+
+
+def fit_overlap(samples: Sequence[OverlapSample]
+                ) -> dict[str, OverlapModel]:
+    """Fit one :class:`OverlapModel` per ordered domain pair present."""
+    groups: dict[str, list[float]] = {}
+    for s in samples:
+        groups.setdefault(overlap_key(s.dom_a, s.dom_b),
+                          []).append(s.factor())
+    return {k: OverlapModel(factor=float(np.median(fs)), n=len(fs))
+            for k, fs in sorted(groups.items())}
 
 
 def _r2(y: np.ndarray, pred: np.ndarray) -> float:
@@ -202,11 +286,17 @@ class CommProfile:
 
     def __init__(self, fingerprint: Mapping,
                  samples: Sequence[MeasuredSample] = (),
-                 models: Mapping[str, LinkModel] | None = None):
+                 models: Mapping[str, LinkModel] | None = None,
+                 overlap_samples: Sequence[OverlapSample] = (),
+                 overlap: Mapping[str, OverlapModel] | None = None):
         self.fingerprint = dict(fingerprint)
         self.samples = list(samples)
         self.models: dict[str, LinkModel] = (
             dict(models) if models is not None else fit_models(self.samples))
+        self.overlap_samples = list(overlap_samples)
+        self.overlap: dict[str, OverlapModel] = (
+            dict(overlap) if overlap is not None
+            else fit_overlap(self.overlap_samples))
 
     # ------------------------------------------------------------- pricing
     def seconds_for(self, algorithm: str, stage: str,
@@ -224,6 +314,30 @@ class CommProfile:
                 return None
             t += md.seconds(dcn_bytes)
         return t
+
+    def overlap_factor(self, dom_a: str, dom_b: str) -> float | None:
+        """Measured serialization factor for dispatching a ``dom_a``-
+        dominant op immediately before a ``dom_b``-dominant one, or None
+        when this ordered pair was never measured (the planner then falls
+        back to its analytic overlap assumption for the pair)."""
+        m = self.overlap.get(overlap_key(dom_a, dom_b))
+        return m.factor if m is not None else None
+
+    @property
+    def has_overlap(self) -> bool:
+        return bool(self.overlap)
+
+    def token(self) -> str:
+        """Content hash of the fitted models + overlap factors -- a cheap
+        identity for caches (e.g. the program lower cache) that must not
+        reuse a plan priced under a different profile."""
+        blob = json.dumps(
+            {"fp": self.fingerprint,
+             "models": {k: m.to_json() for k, m in sorted(self.models.items())},
+             "overlap": {k: m.to_json()
+                         for k, m in sorted(self.overlap.items())}},
+            sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()[:12]
 
     def confidence(self, algorithm: str, stage: str,
                    *, needs_dcn: bool = False) -> float:
@@ -254,25 +368,32 @@ class CommProfile:
                           if want.get(k) != self.fingerprint.get(k))
             raise ProfileMismatchError(
                 f"profile fingerprint mismatch on {diff}: profile was "
-                f"measured on {self.fingerprint}, this substrate is {want}; "
-                f"{RETUNE_RECIPE}")
+                f"measured on {self.fingerprint} (jax "
+                f"{self.fingerprint.get('jax')}), this substrate is {want} "
+                f"(jax {want.get('jax')}); {RETUNE_RECIPE}")
 
     def merge(self, other: "CommProfile") -> "CommProfile":
         """Union of two partial sweeps over the *same* topology: samples
-        concatenate (exact duplicates dropped), models refit over the
-        union."""
+        (per-op and overlap) concatenate with exact duplicates dropped,
+        models and overlap factors refit over the union."""
         if other.fingerprint != self.fingerprint:
             raise ProfileMismatchError(
                 "cannot merge profiles of different topologies: "
                 f"{self.fingerprint} vs {other.fingerprint}; {RETUNE_RECIPE}")
-        seen = set()
-        merged: list[MeasuredSample] = []
-        for s in list(self.samples) + list(other.samples):
-            key = json.dumps(s.to_json(), sort_keys=True)
-            if key not in seen:
-                seen.add(key)
-                merged.append(s)
-        return CommProfile(self.fingerprint, merged)
+
+        def union(a, b):
+            seen, out = set(), []
+            for s in list(a) + list(b):
+                key = json.dumps(s.to_json(), sort_keys=True)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(s)
+            return out
+
+        return CommProfile(
+            self.fingerprint, union(self.samples, other.samples),
+            overlap_samples=union(self.overlap_samples,
+                                  other.overlap_samples))
 
     # --------------------------------------------------------- persistence
     def to_json(self) -> dict:
@@ -282,20 +403,33 @@ class CommProfile:
             "samples": [s.to_json() for s in self.samples],
             "models": {k: m.to_json()
                        for k, m in sorted(self.models.items())},
+            "overlap_samples": [s.to_json() for s in self.overlap_samples],
+            "overlap": {k: m.to_json()
+                        for k, m in sorted(self.overlap.items())},
         }
 
     @staticmethod
     def from_json(data: Mapping) -> "CommProfile":
         version = data.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in _MIGRATABLE_VERSIONS:
             raise ProfileMismatchError(
                 f"profile schema v{version} is not readable by this build "
-                f"(expects v{SCHEMA_VERSION}); {RETUNE_RECIPE}")
+                f"(expects v{SCHEMA_VERSION} or a migratable "
+                f"{_MIGRATABLE_VERSIONS}); {RETUNE_RECIPE}")
+        # v1 -> v2 migration: pre-overlap profiles are valid v2 profiles
+        # with an empty overlap section (the per-op fits carry over as-is;
+        # plan_program simply keeps its analytic overlap assumption until
+        # an overlap sweep lands).
         return CommProfile(
             fingerprint=data["fingerprint"],
             samples=[MeasuredSample.from_json(s) for s in data["samples"]],
             models={k: LinkModel.from_json(m)
-                    for k, m in data["models"].items()})
+                    for k, m in data["models"].items()},
+            overlap_samples=[OverlapSample.from_json(s)
+                             for s in data.get("overlap_samples", ())],
+            overlap={k: OverlapModel.from_json(m)
+                     for k, m in data.get("overlap", {}).items()}
+            if "overlap" in data else None)
 
     def save(self, path: str | os.PathLike) -> str:
         """Write deterministic JSON (sorted keys, fixed layout): saving the
@@ -320,11 +454,14 @@ class CommProfile:
         dims = ",".join(f"{k}={v}"
                         for k, v in self.fingerprint["dims"].items())
         return (f"CommProfile[{dims} jax={self.fingerprint['jax']} "
-                f"samples={len(self.samples)} models={len(self.models)}]")
+                f"samples={len(self.samples)} models={len(self.models)} "
+                f"overlap={len(self.overlap)}]")
 
 
 __all__ = [
     "SCHEMA_VERSION", "MIN_SAMPLES", "MIN_R2",
-    "CommProfile", "LinkModel", "MeasuredSample", "ProfileMismatchError",
-    "fingerprint_key", "fit_models", "topology_fingerprint",
+    "CommProfile", "LinkModel", "MeasuredSample", "OverlapModel",
+    "OverlapSample", "ProfileMismatchError",
+    "fingerprint_key", "fit_models", "fit_overlap", "overlap_key",
+    "topology_fingerprint",
 ]

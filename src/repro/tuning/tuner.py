@@ -4,9 +4,12 @@ This is the user-facing surface of the tuning subsystem:
 
   ``Tuner(cache_dir).tune(cube, sizes=...)``
       runs the :mod:`repro.tuning.microbench` sweep on the live substrate,
-      fits the per-(flow, stage, domain) alpha-beta models, merges into any
-      existing profile for the same topology fingerprint (partial sweeps
-      accumulate) and persists the result in the cache dir.
+      fits the per-(flow, stage, domain) alpha-beta models, runs the
+      program-level overlap sweep (``overlap=True``, the default) so
+      ``plan_program``'s interleaving budget is priced from measured
+      domain-pair serialization factors, merges into any existing profile
+      for the same topology fingerprint (partial sweeps accumulate) and
+      persists the result in the cache dir.
 
   ``tuner.select(primitive, nbytes, comm)``
       the measured analogue of :func:`repro.core.planner.plan`: prices the
@@ -69,14 +72,21 @@ class Tuner:
              sizes: Sequence[int] = microbench.DEFAULT_SIZES,
              primitives: Sequence[str] | None = None,
              reps: int = 5, warmup: int = 2,
+             overlap: bool = True,
+             overlap_sizes: Sequence[int] = microbench.DEFAULT_OVERLAP_SIZES,
              save: bool = True, progress=None) -> CommProfile:
         """Sweep, fit, merge with any cached profile of this topology, and
         persist.  Returns the merged profile (also memoized for
-        :meth:`select`)."""
+        :meth:`select`).  ``overlap=False`` skips the program-level
+        domain-pair sweep (a per-op-only partial tune)."""
         samples = microbench.sweep(cube, sizes=sizes, primitives=primitives,
                                    reps=reps, warmup=warmup,
                                    progress=progress)
-        prof = CommProfile(topology_fingerprint(cube), samples)
+        overlap_samples = microbench.overlap_sweep(
+            cube, sizes=overlap_sizes, reps=reps, warmup=warmup) \
+            if overlap else []
+        prof = CommProfile(topology_fingerprint(cube), samples,
+                           overlap_samples=overlap_samples)
         existing = self._load_if_cached(cube)
         if existing is not None:
             prof = existing.merge(prof)
