@@ -24,11 +24,14 @@ closer to 1.0), and the program section re-runs under the installed profile
 so its joint plans are measured-sourced.
 
 ``--check-against SEED`` is the CI regression gate: after the run, every
-(primitive, flow, nbytes) row of the fresh bench JSON is compared against
-SEED and the process exits non-zero when any row's best ``measured_us``
-regresses beyond ``--tolerance`` (default 2x -- CPU-substrate wall times
-are noisy; the gate catches order-of-magnitude breakage, not percent
-drift).
+(primitive, flow, nbytes) row *and* every named ``programs`` entry (the
+multi-op schedules plus the end-to-end ``train_step`` barrier/overlap
+pair) of the fresh bench JSON is compared against SEED and the process
+exits non-zero when any cell's best ``measured_us`` regresses beyond
+``--tolerance`` (default 2x -- CPU-substrate wall times are noisy; the
+gate catches order-of-magnitude breakage, not percent drift).  Seed cells
+are lifted to the ``--floor-us`` absolute floor before the tolerance
+applies, so a zero/denormal seed cell cannot fail the gate on noise.
 """
 import argparse
 import json
@@ -90,34 +93,59 @@ def _best_by_key(rows) -> dict:
     return out
 
 
+def _best_by_name(programs) -> dict:
+    """Best (minimum) measured_us per program-row name."""
+    out: dict[str, float] = {}
+    for r in programs:
+        us = float(r["measured_us"])
+        if r["name"] not in out or us < out[r["name"]]:
+            out[r["name"]] = us
+    return out
+
+
 def check_against(seed_path: str, fresh_path: str,
-                  tolerance: float = 2.0) -> list[str]:
+                  tolerance: float = 2.0, floor_us: float = 5.0
+                  ) -> list[str]:
     """Compare a fresh bench JSON against the committed seed; returns the
-    list of regression descriptions (empty = gate passes).  Rows present in
-    the seed but missing from the fresh run are reported as warnings (a
-    coverage drop cannot "pass" silently) without failing the gate."""
+    list of regression descriptions (empty = gate passes).  Gates both the
+    primitive ``rows`` (keyed by primitive/flow/nbytes) and the ``programs``
+    section (keyed by name).  Rows present in the seed but missing from the
+    fresh run are reported as warnings (a coverage drop cannot "pass"
+    silently) without failing the gate.
+
+    ``floor_us`` is the absolute comparison floor: the seed value is lifted
+    to at least this many microseconds before the tolerance multiplies it.
+    Without it a zero (or denormally small) seed cell makes the gate
+    hair-trigger -- any measurable fresh value exceeds ``tolerance * ~0``
+    and fails on pure noise instead of a real regression."""
     with open(seed_path) as f:
         seed = json.load(f)
     with open(fresh_path) as f:
         fresh = json.load(f)
-    seed_best = _best_by_key(seed["rows"])
-    fresh_best = _best_by_key(fresh["rows"])
     failures = []
-    for key, seed_us in sorted(seed_best.items()):
-        fresh_us = fresh_best.get(key)
-        tag = "/".join(str(k) for k in key)
-        if fresh_us is None:
-            print(f"# check-against: {tag} missing from fresh run "
-                  "(coverage dropped)", file=sys.stderr)
-            continue
-        if fresh_us > tolerance * seed_us:
-            failures.append(
-                f"{tag}: {fresh_us:.1f}us vs seed {seed_us:.1f}us "
-                f"(> {tolerance:g}x tolerance)")
-    new = sorted(set(fresh_best) - set(seed_best))
-    if new:
-        print(f"# check-against: {len(new)} new cells not in the seed "
-              "(refresh the seed to start tracking them)", file=sys.stderr)
+
+    def gate(section, seed_best, fresh_best):
+        for key, seed_us in sorted(seed_best.items()):
+            fresh_us = fresh_best.get(key)
+            tag = key if isinstance(key, str) else "/".join(
+                str(k) for k in key)
+            if fresh_us is None:
+                print(f"# check-against: {section} {tag} missing from "
+                      "fresh run (coverage dropped)", file=sys.stderr)
+                continue
+            if fresh_us > tolerance * max(seed_us, floor_us):
+                failures.append(
+                    f"{tag}: {fresh_us:.1f}us vs seed {seed_us:.1f}us "
+                    f"(> {tolerance:g}x tolerance)")
+        new = sorted(set(fresh_best) - set(seed_best))
+        if new:
+            print(f"# check-against: {len(new)} new {section} cells not in "
+                  "the seed (refresh the seed to start tracking them)",
+                  file=sys.stderr)
+
+    gate("row", _best_by_key(seed["rows"]), _best_by_key(fresh["rows"]))
+    gate("program", _best_by_name(seed.get("programs", [])),
+         _best_by_name(fresh.get("programs", [])))
     return failures
 
 
@@ -154,6 +182,18 @@ def profile_mode(cache_dir: str, out_json: str) -> None:
         primitives.fig14_fig16_primitives()
         primitives.program_fusion()
         primitives.program_overlap()
+    # 5. end-to-end step accounting.  The train-step bench runs on the
+    # multi-pod (2x2x2) cube, a different topology fingerprint than the
+    # ring sweep above -- tune that cube too so the step's grad-sync
+    # exposure estimates (incl. the DCN hop) price measured-sourced.
+    from benchmarks import train_step
+    pod_cube = train_step._setup_train()[1].cube
+    pod_profile = tuner.tune(pod_cube, sizes=(64 * 1024, 256 * 1024,
+                                              1024 * 1024))
+    print(f"# tuned {pod_profile.describe()} (train-step cube)",
+          file=sys.stderr)
+    with planner.install_profile(pod_profile):
+        train_step.run()
     measured_rows = list(primitives.ROWS)
     med_measured = _median_ratio(measured_rows)
 
@@ -192,6 +232,11 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="check-against noise tolerance as a ratio "
                          "(default 2.0 = fail when a row doubles)")
+    ap.add_argument("--floor-us", type=float, default=5.0,
+                    help="check-against absolute floor: seed cells are "
+                         "lifted to at least this many microseconds before "
+                         "the tolerance applies (a zero seed cell must not "
+                         "fail the gate on noise)")
     args = ap.parse_args()
 
     ensure_devices(8)
@@ -203,8 +248,9 @@ def main() -> None:
         wrote_bench = True
     else:
         if args.only in (None, "primitives"):
-            from benchmarks import primitives
+            from benchmarks import primitives, train_step
             primitives.run()
+            train_step.run()
             _write_bench_json(args.bench_json, primitives.ROWS,
                               primitives.PROGRAM_ROWS)
             wrote_bench = True
@@ -221,7 +267,7 @@ def main() -> None:
                   "JSON (primitives or --profile)", file=sys.stderr)
             sys.exit(2)
         failures = check_against(args.check_against, args.bench_json,
-                                 args.tolerance)
+                                 args.tolerance, args.floor_us)
         if failures:
             print(f"# BENCH REGRESSION vs {args.check_against}:",
                   file=sys.stderr)

@@ -220,7 +220,10 @@ class ProgramPlan:
     only need the op models); ``"mixed"`` when measurement covered part of
     the pricing -- including the previously-unclosable case of measured
     per-op seconds under the *analytic* interleaving model; ``"analytic"``
-    otherwise."""
+    otherwise.  Inter-wave boundary pairs (the previous wave's tail op
+    against the next wave's head op, when the head does not consume the
+    tail's output) count toward the same pair coverage: an unmeasured
+    overlappable boundary demotes the plan to ``"mixed"``."""
     estimates: Mapping[int, CommEstimate]
     order: tuple[int, ...]             # dependency-safe dispatch order
     levels: tuple[tuple[int, ...], ...]  # independent-op waves
@@ -241,19 +244,12 @@ _REQUEST_TO_PLANNER = {
 }
 
 
-def _wave_order_seconds(order, est: Mapping[int, CommEstimate],
-                        factor_of) -> tuple[float, int, int]:
-    """Price one candidate dispatch order of independent ops under the
-    adjacent-pair overlap model: ops issue in sequence, and each adjacent
-    pair (a, b) hides ``(1 - f(dom_a, dom_b)) * min(sec_a, sec_b)`` of the
-    smaller op's time, where f is the measured serialization factor of the
-    *ordered* domain pair.  Unmeasured pairs fall back to the analytic
-    assumption (cross-domain links stream concurrently, f=0; same-domain
-    dispatches serialize on the link, f=1).  An op's time can only be
-    hidden once: the credit attributed to the smaller member of each pair
-    is capped by what that op has left to hide, so a short op flanked by
-    two long neighbours is not subtracted twice.  Returns
-    (seconds, measured_pairs, total_pairs) for this order."""
+def _wave_order_state(order, est: Mapping[int, CommEstimate], factor_of
+                      ) -> tuple[float, int, int, dict[int, float]]:
+    """Like :func:`_wave_order_seconds` but also returns the per-op
+    remaining-hideable-time map (``left``), which inter-wave boundary
+    pricing consumes so an op hidden within its wave cannot be hidden
+    again across the wave boundary."""
     total = sum(est[i].seconds for i in order)
     measured = 0
     left = {i: est[i].seconds for i in order}
@@ -270,7 +266,52 @@ def _wave_order_seconds(order, est: Mapping[int, CommEstimate],
         left[small] -= credit
         total -= credit
     return (max(total, max(est[i].seconds for i in order)),
-            measured, len(order) - 1)
+            measured, len(order) - 1, left)
+
+
+def _wave_order_seconds(order, est: Mapping[int, CommEstimate],
+                        factor_of) -> tuple[float, int, int]:
+    """Price one candidate dispatch order of independent ops under the
+    adjacent-pair overlap model: ops issue in sequence, and each adjacent
+    pair (a, b) hides ``(1 - f(dom_a, dom_b)) * min(sec_a, sec_b)`` of the
+    smaller op's time, where f is the measured serialization factor of the
+    *ordered* domain pair.  Unmeasured pairs fall back to the analytic
+    assumption (cross-domain links stream concurrently, f=0; same-domain
+    dispatches serialize on the link, f=1).  An op's time can only be
+    hidden once: the credit attributed to the smaller member of each pair
+    is capped by what that op has left to hide, so a short op flanked by
+    two long neighbours is not subtracted twice.  Returns
+    (seconds, measured_pairs, total_pairs) for this order."""
+    seconds, measured, pairs, _ = _wave_order_state(order, est, factor_of)
+    return seconds, measured, pairs
+
+
+def _boundary_credit(tail: int | None, head: int,
+                     est: Mapping[int, CommEstimate], factor_of,
+                     left_prev, left_new, deps_of
+                     ) -> tuple[float, int, int, int | None]:
+    """Inter-wave extension of the adjacent-pair model: the boundary pair
+    (last op of wave i's chosen order, first op of wave i+1's) overlaps
+    across the dependency-wave boundary exactly like an intra-wave pair --
+    but only when the dependence structure allows it (the head op must not
+    consume the tail op's output) and only under a *measured* factor (the
+    analytic budget formula knows nothing about wave boundaries and must
+    stay bit-identical without a profile).  Credits are capped by both
+    ops' remaining hideable time, so time hidden inside a wave is never
+    hidden again at the boundary.  Returns
+    (credit, measured_pairs, total_pairs, capped_op): the op whose
+    ``left`` the caller must decrement when the credit lands."""
+    if tail is None:
+        return 0.0, 0, 0, None
+    if tail in deps_of.get(head, ()):
+        return 0.0, 0, 0, None          # structurally serialized: no pair
+    f = factor_of(est[tail].dominant(), est[head].dominant())
+    if f is None:
+        return 0.0, 0, 1, None          # unmeasured boundary -> "mixed"
+    small = tail if est[tail].seconds <= est[head].seconds else head
+    cap = left_prev[tail] if small == tail else left_new[head]
+    credit = min((1.0 - f) * min(est[tail].seconds, est[head].seconds), cap)
+    return credit, 1, 1, small
 
 
 def _alternate(first, second):
@@ -299,6 +340,16 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
     both the chosen order and the ``seconds``-vs-``serial_seconds`` budget
     are priced from data -- the plan's ``est_source`` says how much of the
     pricing was measured.
+
+    The measured factors also discount **across dependency-wave
+    boundaries** (:func:`_boundary_credit`): when the head op of wave i+1
+    does not consume the tail op of wave i's output, the boundary pair
+    overlaps exactly like an intra-wave adjacent pair -- the candidate
+    race for each wave includes the boundary credit, hideable time is
+    shared with the intra-wave pricing (an op is never hidden twice), and
+    waves stop being a hard serialization fence.  Without measured
+    factors the analytic budget (waves strictly sum) is unchanged,
+    bit-for-bit.
     """
     est: dict[int, CommEstimate] = {}
     for o in ops:
@@ -335,9 +386,16 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
     # dependency levels (wave l = ops whose deps all sit in waves < l)
     level_of: dict[int, int] = {}
     remaining = {o.op_id: o for o in ops}
+    deps_of = {o.op_id: frozenset(o.deps) for o in ops}
     levels: list[tuple[int, ...]] = []
     seconds = 0.0
     pairs_measured = pairs_total = 0
+    # inter-wave boundary state: the tail op of the previous wave's chosen
+    # order and its remaining-hideable-time map, carried only while the
+    # previous wave was priced by the measured pairwise model (an analytic
+    # wave breaks the chain -- the analytic formula knows no boundaries)
+    prev_tail: int | None = None
+    prev_left: dict[int, float] = {}
     while remaining:
         wave = [oid for oid, o in remaining.items()
                 if all(d in level_of or d not in est for d in o.deps)]
@@ -354,7 +412,11 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
         if factor_of is not None:
             # measured interleaving: race candidate orders under the
             # profile's ordered-pair factors; first candidate wins ties so
-            # the analytic alternation stays the default shape
+            # the analytic alternation stays the default shape.  The race
+            # is boundary-aware: each candidate's score includes the
+            # credit its head op can earn across the previous wave's
+            # boundary, so a head that pipelines with the previous tail
+            # can win the wave.
             cands, seen = [], set()
             for c in (inter, _alternate(ici, dcn), dcn + ici, ici + dcn,
                       sorted(wave, key=lambda i: -est[i].seconds)):
@@ -362,12 +424,19 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
                 if t not in seen:
                     seen.add(t)
                     cands.append(t)
-            priced = [_wave_order_seconds(c, est, factor_of) for c in cands]
-            # when the winning order owes nothing to a measured factor,
-            # keep the legacy analytic budget below: est_source="analytic"
-            # must always denote the same seconds formula (the pairwise
-            # fallback model is only a vehicle for measured factors,
-            # never a reformulation of the analytic one)
+            priced = []
+            for c in cands:
+                s, m, p, left = _wave_order_state(c, est, factor_of)
+                bc, bm, bp, bsmall = _boundary_credit(
+                    prev_tail, c[0], est, factor_of, prev_left, left,
+                    deps_of)
+                priced.append((s - bc, m + bm, p + bp, left, bc, bsmall))
+            # when the winning order owes nothing to a measured factor
+            # (within the wave or across its boundary), keep the legacy
+            # analytic budget below: est_source="analytic" must always
+            # denote the same seconds formula (the pairwise fallback model
+            # is only a vehicle for measured factors, never a
+            # reformulation of the analytic one)
             if priced[min(range(len(priced)),
                           key=lambda k: priced[k][0])][1] == 0:
                 priced = None
@@ -380,12 +449,18 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
             wave_s = max(ici_t, dcn_t, slowest)
             chosen = inter
             pairs_total += len(wave) - 1
+            prev_tail, prev_left = None, {}
         else:
             best = min(range(len(priced)), key=lambda k: priced[k][0])
-            wave_s, n_meas, n_pairs = priced[best]
+            wave_s, n_meas, n_pairs, left, credit, small = priced[best]
             chosen = cands[best]
             pairs_measured += n_meas
             pairs_total += n_pairs
+            if small is not None and credit > 0.0:
+                # the boundary credit consumes hideable time like any
+                # intra-wave pair: never hide the same op twice
+                (prev_left if small == prev_tail else left)[small] -= credit
+            prev_tail, prev_left = chosen[-1], left
         seconds += wave_s
         levels.append(tuple(chosen))
         for oid in chosen:

@@ -729,7 +729,8 @@ class LoweredProgram:
         env.update(zip(prog._input_vids, inputs))
         return env
 
-    def _run_op(self, op: CommOp, env: dict[int, Any]) -> None:
+    def _run_op(self, op: CommOp, env: dict[int, Any],
+                staged: dict[int, Any] | None = None) -> None:
         import jax.numpy as jnp
         meta = (self.program.program_id, op.fused_from)
         with _suspend_recording():
@@ -744,7 +745,9 @@ class LoweredProgram:
                 env[op.out_vids[0]] = val
             elif op.coalesced:
                 vals = [env[v] for v in op.in_vids]
-                flat = jnp.concatenate([jnp.ravel(v) for v in vals])
+                flat = staged.pop(op.op_id, None) if staged else None
+                if flat is None:
+                    flat = jnp.concatenate([jnp.ravel(v) for v in vals])
                 red = op.comm._dispatch("all_reduce", flat,
                                         algorithm=op.algorithm, op=op.op,
                                         _meta=meta)
@@ -776,11 +779,19 @@ class LoweredProgram:
 
 
 class CommFuture:
-    """Handle on one scheduled op's result(s)."""
+    """Handle on one scheduled op's result(s).
 
-    def __init__(self, execution: "ProgramExecution", op: CommOp):
+    ``out_vids`` restricts ``result()`` to a subset of the op's outputs --
+    :meth:`ProgramExecution.future_for` uses it so a future resolved
+    through coalescing provenance returns just the recorded op's own
+    value, not the whole bucket.
+    """
+
+    def __init__(self, execution: "ProgramExecution", op: CommOp,
+                 out_vids: tuple[int, ...] | None = None):
         self._execution = execution
         self.op = op
+        self._out_vids = out_vids
 
     def done(self) -> bool:
         return self.op.op_id in self._execution._done
@@ -789,7 +800,7 @@ class CommFuture:
         """Force this op (dispatching its unfinished dependencies first);
         returns the op's output value (tuple for coalesced ops)."""
         env = self._execution.force(self.op)
-        outs = tuple(env[v] for v in self.op.out_vids)
+        outs = tuple(env[v] for v in (self._out_vids or self.op.out_vids))
         return outs[0] if len(outs) == 1 else outs
 
 
@@ -800,6 +811,7 @@ class ProgramExecution:
         self.lowered = lowered
         self._env = env
         self._done: set[int] = set()
+        self._staged: dict[int, Any] = {}
         self._producer = {v: o for o in lowered.ops for v in o.out_vids}
         self.futures = [CommFuture(self, o) for o in lowered.ops]
 
@@ -810,9 +822,64 @@ class ProgramExecution:
             dep = self._producer.get(v)
             if dep is not None and dep.op_id not in self._done:
                 self.force(dep)
-        self.lowered._run_op(op, self._env)
+        self.lowered._run_op(op, self._env, self._staged)
         self._done.add(op.op_id)
         return self._env
+
+    def stage(self) -> "ProgramExecution":
+        """Pre-build the flattened/concatenated payload of every coalesced
+        op whose inputs are already available -- the memory-side half of a
+        bucketed dispatch -- without issuing any collective.  The
+        double-buffered grad-sync pipeline
+        (:mod:`repro.runtime.overlap`) stages bucket k+1 here while bucket
+        k's wire op is still in flight; ``force`` then consumes the staged
+        payload instead of re-concatenating."""
+        import jax.numpy as jnp
+        for op in self.lowered.ops:
+            if (not op.coalesced or op.op_id in self._done
+                    or op.op_id in self._staged
+                    or any(v not in self._env for v in op.in_vids)):
+                continue
+            self._staged[op.op_id] = jnp.concatenate(
+                [jnp.ravel(self._env[v]) for v in op.in_vids])
+        return self
+
+    def future_for(self, handle) -> CommFuture:
+        """Future for a *recorded* op -- by the :class:`ProgramValue` its
+        primitive returned at record time, or by recorded op id --
+        resolving through rewrite provenance: a recorded op consumed by
+        fusion/coalescing maps (via ``fused_from``) to the lowered op that
+        carries it.  When the rewrite preserved the recorded op's output
+        value (coalescing does), the future returns exactly that value;
+        when it did not (the reduce_scatter of a fused rs+ag pair has no
+        shard anymore), the future resolves to the rewritten op's result.
+        """
+        prog = self.lowered.program
+        if isinstance(handle, ProgramValue):
+            if handle.program is not prog:
+                raise ValueError(
+                    f"{handle!r} belongs to {handle.program.program_id}, "
+                    f"not {prog.program_id}")
+            rec = next((o for o in prog._ops if handle.vid in o.out_vids),
+                       None)
+            if rec is None:
+                raise KeyError(
+                    f"v{handle.vid} is not produced by any recorded op of "
+                    f"{prog.program_id}")
+        else:
+            rid = int(handle)
+            if not 0 <= rid < len(prog._ops):
+                raise KeyError(
+                    f"{prog.program_id} has no recorded op {rid}")
+            rec = prog._ops[rid]
+        target = next((o for o in self.lowered.ops
+                       if rec.op_id in _origin_ids(o)), None)
+        if target is None:
+            raise KeyError(
+                f"recorded op {rec.op_id} of {prog.program_id} has no "
+                "lowered counterpart (rewrite provenance lost)")
+        keep = tuple(v for v in rec.out_vids if v in target.out_vids)
+        return CommFuture(self, target, out_vids=keep or None)
 
     def outputs(self):
         """Force every op and return the program outputs."""

@@ -1,0 +1,213 @@
+"""Backward-overlapped gradient sync: fire bucket futures *during* backward.
+
+The barrier path (:func:`repro.runtime.trainer.sync_replicated_grads`) runs
+backward to completion and then executes one coalesced grad-sync program --
+the classic bucketed-DDP gap (ROADMAP open item #1; PID-Comm §VI makes the
+same move for rotate/gather phases).  This module closes it:
+
+  bucketing
+      Replicated gradient leaves are partitioned into **reverse-layer-
+      ordered buckets** by the top-level parameter group that produces them
+      last during backward: the loss head (``lm_head``/``final_norm``)
+      gradients materialize first, the trunk stack (``units``) next, the
+      encoder tower after the decoder's backward reaches it, and the input
+      embeddings (``embed``/``frontend_proj``) last.  Finer granularity is
+      not reachable from the trainer: the trunk runs ``lax.scan`` over the
+      stacked unit parameters, so all per-layer gradients of the stack
+      arrive together as one stacked cotangent.
+
+  firing during backward (:func:`with_backward_bucket_sync`)
+      Each bucket's leaves pass through an identity ``jax.custom_vjp`` hook
+      *in forward-production order*; jaxpr transposition processes
+      equations in reverse emission order, so each hook's backward rule --
+      which records the bucket's all-reduces as one CommProgram and
+      dispatches it via ``execute_async`` -- is traced the moment backward
+      has produced the bucket's last contributing cotangent.  The head
+      bucket's sync therefore sits *inside* the backward dataflow, data-
+      dependent only on the head cotangents, and XLA is free to run it
+      under the remaining backward compute.
+
+  double-buffered staging (:func:`sync_replicated_grads_overlapped`)
+      The post-backward dispatch path (for callers that already hold the
+      full gradient tree) pipelines bucket programs through
+      ``ProgramExecution.stage()``: the compress/concat of bucket k+1's
+      coalesced payload is emitted before bucket k's wire op is forced, so
+      the memory-side half of the next dispatch overlaps the previous
+      bucket's wire time.
+
+Both paths are bit-identical to the barrier sync: every leaf still gets a
+psum over exactly its replication axes, and a psum of concatenated leaves
+equals the concatenation of per-leaf psums regardless of which bucket the
+leaf landed in (tests/parallel_check.py asserts exact equality for all 10
+``configs/`` architectures).
+
+No-op on vma-tracking jax (``compat.HAS_VMA``): there autodiff inserts the
+psums itself, already interleaved with backward -- the hooks would
+double-reduce.  Per-bucket programs have stable structure across traces, so
+the cross-program lower cache (:mod:`repro.core.program`) hands every step
+after the first its cached buckets and joint plan.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.runtime.trainer import replication_dims
+
+# Top-level parameter groups in *forward* production order; backward
+# produces their gradients in reverse, which is the bucket dispatch order.
+# Unknown groups ride with the trunk (middle of the pipeline).
+FORWARD_STAGES: tuple[tuple[str, ...], ...] = (
+    ("embed", "frontend_proj"),            # inputs: backward reaches last
+    ("enc_units", "enc_final_norm"),       # encoder tower (enc-dec models)
+    ("units",),                            # decoder/trunk stack
+    ("lm_head", "final_norm"),             # loss head: first grads out
+)
+_TRUNK_STAGE = 2
+
+
+def _stage_of(key: str) -> int:
+    for rank, names in enumerate(FORWARD_STAGES):
+        if key in names:
+            return rank
+    return _TRUNK_STAGE
+
+
+def _top_key(path) -> str:
+    if not path:
+        return ""
+    entry = path[0]
+    return str(getattr(entry, "key", getattr(entry, "name", entry)))
+
+
+def bucket_leaf_indices(tree) -> list[list[int]]:
+    """Partition ``tree``'s flat-leaf indices into reverse-layer-ordered
+    buckets: index 0 is the loss-head bucket (its gradients are the first
+    backward produces), the last is the embedding bucket.  Leaf order
+    inside a bucket follows flattening order.  Empty buckets are dropped.
+    """
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    by_stage: dict[int, list[int]] = {}
+    for i, (path, _) in enumerate(leaves):
+        by_stage.setdefault(_stage_of(_top_key(path)), []).append(i)
+    # dispatch order = reverse of forward production order
+    return [by_stage[s] for s in sorted(by_stage, reverse=True)]
+
+
+def _record_bucket(flat, sflat, idxs, cube, name):
+    """Record one bucket's replicated-leaf all-reduces as a CommProgram.
+    Returns ``(prog, deferred)``: the flat indices routed through the
+    program, in output order (sharded leaves need no reduction and are
+    skipped)."""
+    prog = cube.program(name=name)
+    deferred: list[int] = []
+    with prog:
+        vals = []
+        for i in idxs:
+            missing = replication_dims(sflat[i], cube)
+            if not missing:
+                continue
+            vals.append(cube.comm(missing).all_reduce(flat[i]))
+            deferred.append(i)
+        prog.output(*vals)
+    return prog, deferred
+
+
+def _scatter_results(out, deferred, results) -> None:
+    if len(deferred) == 1:
+        results = (results,)
+    for i, r in zip(deferred, results):
+        out[i] = r
+
+
+def _bucket_hook(cube, leaf_specs, name):
+    """Identity custom_vjp over one bucket's leaves whose backward rule
+    records + async-dispatches the bucket's gradient all-reduces -- the
+    sync becomes part of the backward dataflow itself."""
+
+    @jax.custom_vjp
+    def hook(*leaves):
+        return leaves
+
+    def fwd(*leaves):
+        return leaves, None
+
+    def bwd(_, cts):
+        flat = list(cts)
+        prog, deferred = _record_bucket(flat, leaf_specs,
+                                        range(len(flat)), cube, name)
+        if deferred:
+            ex = prog.execute_async()
+            ex.stage()                  # concat the bucket before the wire op
+            _scatter_results(flat, deferred, ex.outputs())
+        return tuple(flat)
+
+    hook.defvjp(fwd, bwd)
+    return hook
+
+
+def with_backward_bucket_sync(loss_fn, specs, cube):
+    """Wrap ``loss_fn(params, *rest)`` so that differentiating the wrapper
+    yields gradients already synced over their replication axes, with each
+    bucket's CommProgram fired as soon as backward produces its last
+    contributing leaf (reverse-layer order: head bucket first, embeddings
+    last).  Replaces the post-backward
+    :func:`~repro.runtime.trainer.sync_replicated_grads` call --
+    bit-identically, but inside the backward dataflow.
+
+    Returns ``loss_fn`` unchanged on vma-tracking jax, where autodiff
+    inserts (and interleaves) the reductions itself.
+    """
+    from repro import compat
+    if compat.HAS_VMA:
+        return loss_fn
+
+    def wrapped(params, *rest):
+        flat, tdef = jax.tree.flatten(params)
+        sflat = tdef.flatten_up_to(specs)
+        buckets = [idxs for idxs in bucket_leaf_indices(params)
+                   if any(replication_dims(sflat[i], cube) for i in idxs)]
+        new_flat = list(flat)
+        # Hooks are *emitted* in forward-production order (reversed bucket
+        # order): transposition walks the jaxpr backwards, so the head
+        # bucket's sync is the first one traced during backward.
+        for k, idxs in reversed(list(enumerate(buckets))):
+            hook = _bucket_hook(cube, tuple(sflat[i] for i in idxs),
+                                f"grad-sync-b{k}")
+            synced = hook(*(new_flat[i] for i in idxs))
+            for i, v in zip(idxs, synced):
+                new_flat[i] = v
+        return loss_fn(jax.tree.unflatten(tdef, new_flat), *rest)
+
+    return wrapped
+
+
+def sync_replicated_grads_overlapped(grads, specs, cube):
+    """Post-backward bucketed dispatch: the fallback when the caller holds
+    the full gradient tree (no hook placement possible).  Records one
+    program per reverse-layer bucket and pipelines them double-buffered:
+    bucket k+1 is staged (coalesced payloads concatenated) before bucket
+    k's wire op is forced, so staging overlaps wire time.  Bit-identical
+    to :func:`~repro.runtime.trainer.sync_replicated_grads`.
+
+    No-op on vma-tracking jax (autodiff already inserted the psums).
+    """
+    from repro import compat
+    if compat.HAS_VMA:
+        return grads
+    flat, tdef = jax.tree.flatten(grads)
+    sflat = tdef.flatten_up_to(specs)
+    out = list(flat)
+    recorded = []
+    for idxs in bucket_leaf_indices(grads):
+        prog, deferred = _record_bucket(
+            flat, sflat, idxs, cube, f"grad-sync-b{len(recorded)}")
+        if deferred:
+            recorded.append((prog, deferred))
+    execs = [prog.execute_async() for prog, _ in recorded]
+    if execs:
+        execs[0].stage()
+    for k, (ex, (_, deferred)) in enumerate(zip(execs, recorded)):
+        if k + 1 < len(execs):
+            execs[k + 1].stage()        # double-buffer: stage the next
+        _scatter_results(out, deferred, ex.outputs())  # ...force this one
+    return jax.tree.unflatten(tdef, out)

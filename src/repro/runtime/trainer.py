@@ -53,6 +53,16 @@ class TrainConfig:
     # accumulate (effective only with compress_pod_grads on the explicit
     # pre-vma sync path over a DCN-crossing cube -- see use_error_feedback).
     error_feedback: bool = True
+    # Backward-overlapped gradient sync (ROADMAP open item #1): bucket the
+    # replicated-leaf all-reduces by reverse-layer order and fire each
+    # bucket's program *during* backward via custom_vjp hooks
+    # (repro.runtime.overlap), instead of one barrier sync after backward
+    # completes.  Bit-identical to the barrier path.  Effective on the
+    # explicit pre-vma sync path without compressed pod gradients; the
+    # compressed/error-feedback flow keeps the barrier sync (blockwise
+    # int8 quantization is bucketing-sensitive), and on vma jax autodiff
+    # already interleaves the reductions.
+    overlap_grad_sync: bool = True
     step_deadline_s: float = 0.0       # 0 = no straggler deadline
 
 
@@ -222,6 +232,15 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
             "route them through the compressed collective")
 
     with_ef = use_error_feedback(tc, topo.cube)
+    # backward-overlapped sync: pre-vma explicit path only, and not under
+    # the compressed/error-feedback flow (blockwise int8 quantization is
+    # bucketing-sensitive; the barrier path keeps its accuracy contract)
+    overlap_sync = (tc.overlap_grad_sync and not compat.HAS_VMA
+                    and not with_ef and not tc.compress_pod_grads)
+    if overlap_sync:
+        from repro.runtime.overlap import with_backward_bucket_sync
+        loss_overlapped = with_backward_bucket_sync(
+            model.loss_shard, specs, topo.cube)
 
     def step_shard(params, opt_state, batch):
         # Gradient reductions are inserted by shard_map's vma-aware autodiff
@@ -230,16 +249,24 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
         # replicated KV, cross-pod) get their psums from the varying-axes
         # tracker -- the hierarchical schedule of paper §IX-A falls out of
         # the sharding structure.
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss_shard, has_aux=True)(params, batch)
-        # pre-vma jax: restore the replicated-leaf all-reduces by hand --
-        # recorded as one coalesced CommProgram, planner-dispatched
-        # (hierarchical across pods; int8 + error feedback when enabled)
+        if overlap_sync:
+            # pre-vma jax, overlapped: per-bucket custom_vjp hooks fire
+            # each bucket's grad-sync program during backward (reverse-
+            # layer order), so grads come out already synced
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_overlapped, has_aux=True)(params, batch)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_shard, has_aux=True)(params, batch)
+        # pre-vma jax, barrier path: restore the replicated-leaf
+        # all-reduces by hand -- recorded as one coalesced CommProgram,
+        # planner-dispatched (hierarchical across pods; int8 + error
+        # feedback when enabled)
         if with_ef:
             grads, new_ef = sync_replicated_grads(
                 grads, specs, topo.cube, compress_pod=True,
                 ef=opt_state["ef"])
-        else:
+        elif not overlap_sync:
             grads = sync_replicated_grads(grads, specs, topo.cube,
                                           compress_pod=tc.compress_pod_grads)
 
@@ -354,6 +381,12 @@ class Trainer:
             t0 = time.monotonic()
             params, opt_state, metrics = self.step_fn(params, opt_state,
                                                       batch)
+            # block on the step's real outputs before reading the clock:
+            # the param/opt_state updates are not data-dependent on the
+            # logged metrics, so coercing metrics alone lets async dispatch
+            # leak their compute out of dt -- the straggler deadline and
+            # the logged per-step ms would undercount
+            jax.block_until_ready((params, opt_state))
             metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.monotonic() - t0
             if self.tc.step_deadline_s and dt > self.tc.step_deadline_s:
