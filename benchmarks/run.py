@@ -23,15 +23,25 @@ ratio before and after calibration (the calibrated median must sit strictly
 closer to 1.0), and the program section re-runs under the installed profile
 so its joint plans are measured-sourced.
 
-``--check-against SEED`` is the CI regression gate: after the run, every
-(primitive, flow, nbytes) row *and* every named ``programs`` entry (the
-multi-op schedules plus the end-to-end ``train_step`` barrier/overlap
+``--check-against SEED[=FRESH]`` is the CI regression gate: after the run,
+every (primitive, flow, nbytes) row *and* every named ``programs`` entry
+(the multi-op schedules plus the end-to-end ``train_step`` barrier/overlap
 pair) of the fresh bench JSON is compared against SEED and the process
 exits non-zero when any cell's best ``measured_us`` regresses beyond
 ``--tolerance`` (default 2x -- CPU-substrate wall times are noisy; the
 gate catches order-of-magnitude breakage, not percent drift).  Seed cells
 are lifted to the ``--floor-us`` absolute floor before the tolerance
 applies, so a zero/denormal seed cell cannot fail the gate on noise.
+
+The flag repeats to gate several bench files in one invocation -- each
+occurrence names a committed seed and, after ``=``, the fresh JSON to hold
+against it (defaulting to this run's ``--bench-json``), so the primitive
+trajectory and the serving trajectory (``BENCH_serving.json``, produced by
+``benchmarks/serving.py``) share one gate with per-file coverage warnings:
+
+    python -m benchmarks.run --profile --bench-json BENCH_fresh.json \\
+        --check-against BENCH_primitives.json \\
+        --check-against BENCH_serving.json=BENCH_serving_fresh.json
 """
 import argparse
 import json
@@ -53,6 +63,12 @@ seed refresh (after an intentional perf or schema change):
       python -m benchmarks.run --profile --cache-dir .tuning-cache \\
           --bench-json BENCH_primitives.json
       git add BENCH_primitives.json   # commit the new trajectory seed
+
+serving trajectory (seeded by benchmarks/serving.py, gated here):
+      python -m benchmarks.serving --bench-json BENCH_serving_fresh.json
+      python -m benchmarks.run --profile --bench-json BENCH_fresh.json \\
+          --check-against BENCH_primitives.json \\
+          --check-against BENCH_serving.json=BENCH_serving_fresh.json
 """
 
 
@@ -123,6 +139,7 @@ def check_against(seed_path: str, fresh_path: str,
     with open(fresh_path) as f:
         fresh = json.load(f)
     failures = []
+    label = seed_path
 
     def gate(section, seed_best, fresh_best):
         for key, seed_us in sorted(seed_best.items()):
@@ -130,18 +147,18 @@ def check_against(seed_path: str, fresh_path: str,
             tag = key if isinstance(key, str) else "/".join(
                 str(k) for k in key)
             if fresh_us is None:
-                print(f"# check-against: {section} {tag} missing from "
-                      "fresh run (coverage dropped)", file=sys.stderr)
+                print(f"# check-against[{label}]: {section} {tag} missing "
+                      "from fresh run (coverage dropped)", file=sys.stderr)
                 continue
             if fresh_us > tolerance * max(seed_us, floor_us):
                 failures.append(
-                    f"{tag}: {fresh_us:.1f}us vs seed {seed_us:.1f}us "
-                    f"(> {tolerance:g}x tolerance)")
+                    f"{label}: {tag}: {fresh_us:.1f}us vs seed "
+                    f"{seed_us:.1f}us (> {tolerance:g}x tolerance)")
         new = sorted(set(fresh_best) - set(seed_best))
         if new:
-            print(f"# check-against: {len(new)} new {section} cells not in "
-                  "the seed (refresh the seed to start tracking them)",
-                  file=sys.stderr)
+            print(f"# check-against[{label}]: {len(new)} new {section} "
+                  "cells not in the seed (refresh the seed to start "
+                  "tracking them)", file=sys.stderr)
 
     gate("row", _best_by_key(seed["rows"]), _best_by_key(fresh["rows"]))
     gate("program", _best_by_name(seed.get("programs", [])),
@@ -226,9 +243,13 @@ def main() -> None:
     ap.add_argument("--bench-json", default=BENCH_JSON,
                     help="bench-trajectory output path (never written "
                          "anywhere else)")
-    ap.add_argument("--check-against", default=None, metavar="SEED",
-                    help="after the run, gate the fresh bench JSON against "
-                         "this committed seed; exit 1 on regression")
+    ap.add_argument("--check-against", action="append", default=None,
+                    metavar="SEED[=FRESH]",
+                    help="after the run, gate a fresh bench JSON against "
+                         "this committed seed; exit 1 on regression. "
+                         "Repeatable; FRESH defaults to --bench-json, so "
+                         "extra occurrences can gate other trajectories "
+                         "(e.g. BENCH_serving.json=BENCH_serving_fresh.json)")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="check-against noise tolerance as a ratio "
                          "(default 2.0 = fail when a row doubles)")
@@ -262,21 +283,29 @@ def main() -> None:
             roofline.run()
 
     if args.check_against:
-        if not wrote_bench:
-            print("# check-against requires a run that writes the bench "
-                  "JSON (primitives or --profile)", file=sys.stderr)
-            sys.exit(2)
-        failures = check_against(args.check_against, args.bench_json,
-                                 args.tolerance, args.floor_us)
+        failures = []
+        for spec in args.check_against:
+            seed, _, fresh = spec.partition("=")
+            if not fresh:
+                # gating this run's own output needs this run to have
+                # produced it; an explicit SEED=FRESH pair gates a file
+                # written by another harness (e.g. benchmarks/serving.py)
+                if not wrote_bench:
+                    print("# check-against requires a run that writes the "
+                          "bench JSON (primitives or --profile)",
+                          file=sys.stderr)
+                    sys.exit(2)
+                fresh = args.bench_json
+            failures += check_against(seed, fresh, args.tolerance,
+                                      args.floor_us)
         if failures:
-            print(f"# BENCH REGRESSION vs {args.check_against}:",
-                  file=sys.stderr)
+            print("# BENCH REGRESSION:", file=sys.stderr)
             for f in failures:
                 print(f"#   {f}", file=sys.stderr)
             print("# intentional change? refresh the seed (see --help)",
                   file=sys.stderr)
             sys.exit(1)
-        print(f"# check-against {args.check_against}: "
+        print(f"# check-against {', '.join(args.check_against)}: "
               f"ok (tolerance {args.tolerance:g}x)", file=sys.stderr)
 
 

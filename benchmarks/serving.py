@@ -1,0 +1,125 @@
+"""Serving throughput benchmark: the continuous-batching engine under a
+Poisson request-arrival trace, swept over batch size.
+
+Per batch size the engine serves a mixed-length trace (random prompt and
+output lengths) and reports aggregate decode throughput plus the per-token
+latency distribution; all host<->PE control traffic rides the engine's
+one-recorded-CommProgram-per-step path, so the numbers include the
+program-scheduled collective overhead the framework actually pays.
+
+    PYTHONPATH=src python -m benchmarks.serving [--bench-json BENCH_serving.json]
+
+Seeds the serving bench trajectory (default ``BENCH_serving.json``): a
+``programs`` section with three lower-is-better cells per batch size --
+
+    serving/b<B>/tok_us    inverse aggregate throughput (us per token)
+    serving/b<B>/p50_us    median per-token latency
+    serving/b<B>/p99_us    tail  per-token latency
+
+-- each carrying the per-step program's jointly-planned cost estimate, plus
+a ``serving`` extra with the raw metrics (tokens/s, steps, preemptions).
+CI gates a fresh run against the committed seed through the multi-file
+``benchmarks.run --check-against BENCH_serving.json=BENCH_serving_fresh.json``.
+"""
+import argparse
+import dataclasses
+import sys
+
+from benchmarks._timing import emit, ensure_devices
+
+BENCH_JSON = "BENCH_serving.json"
+
+
+def bench_batch(cfg, B: int, *, n_requests: int, s_ctx: int, seed: int):
+    """One engine instance at batch ``B``: warmup trace (compiles the step),
+    then the measured Poisson trace."""
+    from repro.launch.mesh import make_mesh
+    from repro.models.params import init_params
+    from repro.models.serving import make_serve_plan
+    from repro.models.topology import build_serve_topology
+    from repro.serving import ServeEngine, poisson_trace
+
+    mesh = make_mesh((1, 8), ("data", "model"))
+    topo = build_serve_topology(cfg, mesh)
+    plan = make_serve_plan(cfg, topo, S_ctx=s_ctx, global_batch=B)
+    params = init_params(cfg, topo, seed=0)
+    eng = ServeEngine(cfg, topo, plan, params, page_size=4, seed=seed)
+
+    warm = poisson_trace(2, rate=2.0, plen_range=(3, 6),
+                         max_new_range=(2, 3), vocab=cfg.vocab_size,
+                         seed=seed + 1)
+    eng.run(warm)
+    eng.step_wall.clear()
+    eng.token_wall.clear()
+    eng.finished.clear()
+    eng.programs_recorded = 0
+
+    trace = poisson_trace(n_requests, rate=max(1.0, B / 2),
+                          plen_range=(4, 12), max_new_range=(4, 10),
+                          vocab=cfg.vocab_size, seed=seed)
+    for r in trace:
+        r.arrival += eng.step_idx     # trace is relative to "now"
+    metrics = eng.run(trace)
+    lowered = eng.last_program.lower()
+    metrics["plan_est_us"] = lowered.plan.seconds * 1e6
+    metrics["serial_est_us"] = lowered.plan.serial_seconds * 1e6
+    metrics["est_source"] = lowered.plan.est_source
+    metrics["program_ops"] = len(lowered.ops)
+    return metrics
+
+
+def run(batches=(2, 4, 8), *, n_requests: int | None = None,
+        s_ctx: int = 32, seed: int = 0):
+    """Returns (program_rows, serving_extra) for the bench JSON."""
+    from repro.configs import get
+
+    cfg = get("qwen3-1.7b").scaled_for_smoke()
+    cfg = dataclasses.replace(cfg, tp=8)
+    program_rows, extra = [], {}
+    for B in batches:
+        n = n_requests or 3 * B
+        m = bench_batch(cfg, B, n_requests=n, s_ctx=s_ctx, seed=seed)
+        tok_us = 1e6 / m["tokens_per_s"]
+        cells = {"tok_us": tok_us,
+                 "p50_us": m["p50_token_s"] * 1e6,
+                 "p99_us": m["p99_token_s"] * 1e6}
+        for cell, us in cells.items():
+            program_rows.append({
+                "name": f"serving/b{B}/{cell}", "ops": m["program_ops"],
+                "measured_us": us, "plan_est_us": m["plan_est_us"],
+                "serial_est_us": m["serial_est_us"],
+                "est_source": m["est_source"]})
+            emit(f"serving/b{B}/{cell}", us)
+        extra[str(B)] = {
+            "tokens_per_s": m["tokens_per_s"], "steps": m["steps"],
+            "generated_tokens": m["generated_tokens"],
+            "requests": n, "preemptions": m["preemptions"],
+            "programs_recorded": m["programs_recorded"]}
+        print(f"# b{B}: {m['tokens_per_s']:.1f} tok/s over {m['steps']} "
+              f"steps ({m['generated_tokens']} tokens, "
+              f"{m['programs_recorded']} step programs)", file=sys.stderr)
+    return program_rows, extra
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-json", default=BENCH_JSON)
+    ap.add_argument("--batches", default="2,4,8",
+                    help="comma-separated batch sizes to sweep")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per batch point (default 3x batch)")
+    ap.add_argument("--s-ctx", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    ensure_devices(8)
+
+    print("name,us_per_call,derived")
+    batches = tuple(int(b) for b in args.batches.split(","))
+    rows, extra = run(batches, n_requests=args.requests, s_ctx=args.s_ctx,
+                      seed=args.seed)
+    from benchmarks.run import _write_bench_json
+    _write_bench_json(args.bench_json, [], rows, extra={"serving": extra})
+
+
+if __name__ == "__main__":
+    main()

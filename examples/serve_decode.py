@@ -1,5 +1,10 @@
-"""Serve a small model with batched requests: flash-decode with a shared
-KV cache, per-request positions (continuous batching), greedy sampling.
+"""Continuous-batching decode serving on the PE hypercube: a Poisson
+arrival trace of mixed-length requests served by ``repro.serving`` --
+paged KV cache (per-shard page pools, per-request page table), admission /
+eviction / slot reuse per decode step, teacher-forced prefill through the
+flash-decode cell, on-device sampling, and ONE recorded CommProgram of
+rooted collectives per step, lowered once and served from the
+structural-fingerprint cache ever after.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -7,67 +12,53 @@ import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            + os.environ.get("XLA_FLAGS", ""))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from repro.compat import shard_map
-from jax.sharding import PartitionSpec as P
+import dataclasses
 
 from repro.configs import get
+from repro.core.program import LOWER_STATS
 from repro.launch.mesh import make_mesh
-from repro.models.params import init_params, param_specs
-from repro.models.serving import (
-    Server, cache_specs, init_cache, make_serve_plan)
+from repro.models.params import init_params
+from repro.models.serving import make_serve_plan
 from repro.models.topology import build_serve_topology
+from repro.serving import ServeEngine, poisson_trace
 
 cfg = get("qwen3-1.7b").scaled_for_smoke()
 # serve on all 8 devices: maximal model sharding, batch replicated
-import dataclasses
 cfg = dataclasses.replace(cfg, tp=8)
 
 mesh = make_mesh((1, 8), ("data", "model"))
 topo = build_serve_topology(cfg, mesh)
 B, S_ctx = 4, 48
 plan = make_serve_plan(cfg, topo, S_ctx=S_ctx, global_batch=B)
-server = Server(cfg, topo, plan)
-print(f"serving {cfg.name} on {topo.cube.describe()}; "
-      f"cache {plan.S_cache} x {B} requests")
-
 params = init_params(cfg, topo, seed=0)
-cache = init_cache(cfg, topo, plan)
-ba = plan.batch_axes or None
-step = jax.jit(shard_map(
-    server.decode_shard, mesh=topo.cube.mesh,
-    in_specs=(param_specs(cfg, topo), cache_specs(cfg, topo, plan),
-              P(ba), P(ba)),
-    out_specs=(P(ba, topo.tp), cache_specs(cfg, topo, plan)),
-    check_vma=False), donate_argnums=(1,))
+# S_cache 48 over 8 shards = 6 slots/shard -> 3-slot pages, 2 per shard
+engine = ServeEngine(cfg, topo, plan, params, page_size=3, seed=0)
+print(f"serving {cfg.name} on {topo.cube.describe()}; "
+      f"{B} lanes x {plan.S_cache} slots in "
+      f"{engine.pplan.pages_per_shard}-page pools "
+      f"({engine.pplan.page_size} slots/page, "
+      f"{engine.pplan.n_shards} shards)")
 
-rng = np.random.RandomState(0)
-# requests arrive with different prompt lengths (continuous batching):
-prompt_lens = np.array([8, 12, 5, 16])
-prompts = [rng.randint(0, cfg.vocab_size, (int(n),)) for n in prompt_lens]
-pos = np.zeros(B, np.int32)
-toks = np.array([p[0] for p in prompts], np.int32)
-outputs = [[] for _ in range(B)]
+# mixed request lengths under Poisson arrivals -- more requests than lanes,
+# so lanes are reused as requests complete (continuous batching)
+trace = poisson_trace(10, rate=1.5, plen_range=(5, 16),
+                      max_new_range=(4, 10), vocab=cfg.vocab_size, seed=7)
+before = dict(LOWER_STATS)
+metrics = engine.run(trace)
+hits = LOWER_STATS["cache_hits"] - before["cache_hits"]
+lowered = LOWER_STATS["lowered"] - before["lowered"]
 
-import time
-t0 = time.monotonic()
-steps = 0
-while pos.max() < S_ctx - 1:
-    logits, cache = step(params, cache, jnp.asarray(toks),
-                         jnp.asarray(pos))
-    nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-    steps += 1
-    for b in range(B):
-        pos[b] += 1
-        if pos[b] < prompt_lens[b]:
-            toks[b] = prompts[b][pos[b]]          # still consuming prompt
-        else:
-            toks[b] = nxt[b]
-            outputs[b].append(int(nxt[b]))
-dt = time.monotonic() - t0
-print(f"{steps} decode steps in {dt:.1f}s "
-      f"({steps*B/dt:.1f} tok/s aggregate)")
-for b, o in enumerate(outputs):
-    print(f"request {b} (prompt {prompt_lens[b]:2d}): {o[:10]}")
+print(f"{metrics['steps']} engine steps in {metrics['wall_s']:.1f}s: "
+      f"{metrics['generated_tokens']} tokens at "
+      f"{metrics['tokens_per_s']:.1f} tok/s "
+      f"(p50 {metrics['p50_token_s'] * 1e3:.1f} ms/tok, "
+      f"p99 {metrics['p99_token_s'] * 1e3:.1f} ms/tok)")
+print(f"per-step programs: {metrics['programs_recorded']} recorded, "
+      f"{lowered} lowered, {hits} fingerprint-cache hits")
+assert lowered == 1 and hits >= metrics["steps"] - 1
+assert len(metrics["finished"]) == len(trace)
+for r in sorted(metrics["finished"], key=lambda r: r.rid):
+    assert len(r.out_tokens) == r.max_new
+    print(f"request {r.rid} (arrived {r.arrival:2d}, prompt {r.plen:2d}): "
+          f"steps {r.admitted_step}-{r.finished_step} -> "
+          f"{r.out_tokens[:8]}")

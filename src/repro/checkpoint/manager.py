@@ -49,6 +49,13 @@ class CheckpointManager:
         leaves, treedef = _flatten(tree)
         host = [np.asarray(jax.device_get(l)) for l in leaves]
 
+        # jax flattens the {"opt", "params"} dict in sorted-key order, so
+        # the opt leaves occupy a contiguous prefix and the params leaves a
+        # contiguous suffix; recording the section sizes lets a params-only
+        # consumer (restore-for-serving) address its leaves without an
+        # opt_state skeleton
+        n_opt = len(jax.tree.leaves(opt_state))
+
         def write():
             tmp = self._dir(step) + ".tmp"
             os.makedirs(tmp, exist_ok=True)
@@ -57,6 +64,7 @@ class CheckpointManager:
             manifest = {
                 "step": step,
                 "n_leaves": len(host),
+                "sections": {"opt": n_opt, "params": len(host) - n_opt},
                 "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
                 if False else None,
                 "extra": extra or {},
@@ -118,3 +126,43 @@ class CheckpointManager:
                 out.append(jax.numpy.asarray(a))
         tree = jax.tree.unflatten(treedef, out)
         return tree["params"], tree["opt"]
+
+    def restore_params(self, step: int, params_like, *, topo=None,
+                       param_specs=None):
+        """Restore **params only** onto a target topology -- the
+        restore-for-serving path: a checkpoint saved on the train cube loads
+        directly onto ``build_serve_topology``'s cube (pass the *serve*
+        topology and the serve-side ``param_specs(cfg, serve_topo)``), each
+        leaf re-sharded by ``device_put`` with the target NamedSharding, no
+        manual re-sharding and no optimizer-state skeleton required.
+
+        Leaf addressing uses the manifest's ``sections`` (params leaves are
+        the trailing section of the flat order); checkpoints from before
+        sections were recorded fall back to ``n_leaves - len(params leaves)``,
+        which is the same offset because ``"params"`` sorts after ``"opt"``
+        in the save-time flatten.
+        """
+        self.wait()
+        d = self._dir(step)
+        leaves, treedef = _flatten(params_like)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        sections = manifest.get("sections")
+        n_params = (sections["params"] if sections else len(leaves))
+        if n_params != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {n_params} params leaves but "
+                f"the target structure has {len(leaves)} -- architecture "
+                "mismatch between save and restore")
+        offset = manifest["n_leaves"] - n_params
+        specs = None
+        if topo is not None and param_specs is not None:
+            specs, _ = _flatten(param_specs)
+        out = []
+        for i in range(len(leaves)):
+            a = np.load(os.path.join(d, f"arr_{offset + i}.npy"))
+            if specs is not None:
+                out.append(jax.device_put(a, topo.cube.sharding(specs[i])))
+            else:
+                out.append(jax.numpy.asarray(a))
+        return jax.tree.unflatten(treedef, out)

@@ -43,6 +43,11 @@ class ServePlan:
 def make_serve_plan(cfg: ModelConfig, topo: Topology, *, S_ctx: int,
                     global_batch: int, cache_dtype: str = "bf16"
                     ) -> ServePlan:
+    if cache_dtype not in ("bf16", "int8"):
+        raise ValueError(
+            f"cache_dtype must be 'bf16' or 'int8', got {cache_dtype!r} "
+            "(the KV cache is either compute-dtype or the §V-C 8-bit "
+            "cross-domain-modulated layout; nothing else has a decode path)")
     pods = topo.size(("pod",)) if "pod" in topo.cube.dim_names else 1
     batch_axes: tuple[str, ...] = ()
     b = global_batch

@@ -4,4 +4,6 @@ primitives and a virtual-PE substrate for differential conformance testing.
 ``oracles``    pure-NumPy reference semantics, multi-instance included.
 ``substrate``  boots an N-device host-platform hypercube and runs per-shard
                collectives under shard_map for comparison against the oracles.
+``paging``     pure-NumPy page-table + paged-view oracle for the serving
+               subsystem's block KV cache (``repro.serving.pages``).
 """
