@@ -199,6 +199,7 @@ def profile_mode(cache_dir: str, out_json: str) -> None:
         primitives.fig14_fig16_primitives()
         primitives.program_fusion()
         primitives.program_overlap()
+        primitives.fused_kernels()
     # 5. end-to-end step accounting.  The train-step bench runs on the
     # multi-pod (2x2x2) cube, a different topology fingerprint than the
     # ring sweep above -- tune that cube too so the step's grad-sync

@@ -1,0 +1,123 @@
+"""Collective-fused kernels on the PE hypercube: ring attention and matmul
+comm epilogues (``repro.kernels.collective``) dispatched as first-class
+registry algorithms.
+
+Three acts:
+  1. explicit dispatch -- ``ring_attention`` rotates kv blocks around an
+     8-PE ring while the flash kv-loop consumes them, checked against the
+     gather-then-attend pipeline within the documented tolerance;
+  2. the matmul fusions -- ``all_gather_matmul`` / ``matmul_reduce_scatter``
+     are *bit-identical* to their unfused gather/scatter pipelines
+     (integer-valued fp32 for the epilogue);
+  3. ``algorithm="auto"`` -- a measured CommProfile that prices the fused
+     ring flows cheaper flips an MLP call site from the direct collectives
+     to ``ring_fused`` + ``rs_epilogue``, visible in the CommTrace.
+
+    PYTHONPATH=src python examples/fused_kernels.py
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import planner
+from repro.core.comm import CommTrace
+from repro.core.hypercube import Hypercube
+from repro.kernels.collective import (
+    RING_ATTN_TOL, all_gather_matmul, matmul_reduce_scatter, ring_attention)
+from repro.launch.mesh import make_mesh
+from repro.models.layers import chunked_attention, rms_norm
+from repro.tuning import CommProfile, LinkModel, topology_fingerprint
+
+cube = Hypercube.build(make_mesh((8,), ("d",)), {"d": 8})
+comm = cube.comm("d")
+g = 8
+print(f"hypercube {cube.describe()}")
+
+
+def run(fn, in_specs, out_specs, *args):
+    f = jax.jit(shard_map(fn, mesh=cube.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False))
+    return np.asarray(f(*args))
+
+
+# ---- 1. ring attention: the full-sequence k/v never materializes --------
+B, S_loc, H, hd = 1, 32, 4, 16
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (g, B, S_loc, H, hd), jnp.float32)
+k = jax.random.normal(ks[1], (g, B, S_loc, H, hd), jnp.float32)
+v = jax.random.normal(ks[2], (g, B, S_loc, H, hd), jnp.float32)
+spec = P("d", None, None, None, None)
+
+ring = run(lambda qv, kv, vv: ring_attention(comm, qv[0], kv[0], vv[0])[None],
+           (spec,) * 3, spec, q, k, v)
+
+
+def gather_attend(qv, kv, vv):
+    kf = comm.all_gather(kv[0], axis=1)          # assemble the sequence
+    vf = comm.all_gather(vv[0], axis=1)
+    q_off = comm.axis_index() * S_loc
+    return chunked_attention(qv[0], kf, vf, causal=True, q_offset=q_off)[None]
+
+
+base = run(gather_attend, (spec,) * 3, spec, q, k, v)
+err = np.abs(ring - base).max()
+assert err <= RING_ATTN_TOL["float32"], err
+print(f"ring attention vs gather-then-attend: max |err| {err:.2e} "
+      f"(documented tol {RING_ATTN_TOL['float32']:g})")
+
+# ---- 2. matmul comm fusions: bit-identical contracts --------------------
+rng = np.random.RandomState(1)
+x = rng.randn(g, 2, 4, 6).astype(np.float32)
+gamma, wu = rng.randn(6).astype(np.float32), rng.randn(6, 5).astype(np.float32)
+block_fn = lambda b: rms_norm(b, gamma, 1e-6) @ wu
+mspec = P("d", None, None, None)
+fused = run(lambda vv: all_gather_matmul(comm, vv[0], axis=1,
+                                         block_fn=block_fn)[None],
+            (mspec,), mspec, x)
+plain = run(lambda vv: block_fn(comm.all_gather(vv[0], axis=1))[None],
+            (mspec,), mspec, x)
+assert (fused == plain).all()
+print("ag_prologue (norm + up-proj in the gather ring): bit-identical")
+
+h = rng.randint(-3, 4, (g, 16, 4)).astype(np.float32)
+w = rng.randint(-3, 4, (4, 6)).astype(np.float32)
+hspec = P("d", None, None)
+fused = run(lambda vv: matmul_reduce_scatter(comm, vv[0], w, axis=0)[None],
+            (hspec,), hspec, h)
+plain = run(lambda vv: comm.reduce_scatter(vv[0] @ w, axis=0)[None],
+            (hspec,), hspec, h)
+assert (fused == plain).all()
+print("rs_epilogue (lazy-tile out-proj, integer fp32): bit-identical")
+
+# ---- 3. auto dispatch under a measured profile --------------------------
+fast = LinkModel(alpha=0.0, beta=1e-12, n=8, r2=1.0)
+slow = LinkModel(alpha=1.0, beta=1e-6, n=8, r2=1.0)
+prof = CommProfile(topology_fingerprint(cube), models={
+    "ring_fused/cm/ici": fast, "rs_epilogue/cm/ici": fast,
+    "naive/naive/ici": slow, "direct/im/ici": slow, "direct/cm/ici": slow})
+
+
+def mlp(vv):                                     # a tensor-parallel MLP
+    hh = comm.all_gather(vv[0], axis=0)
+    return comm.reduce_scatter(hh @ w, axis=0)[None]
+
+
+xin = rng.randint(-3, 4, (g, 4, 4)).astype(np.float32)
+with CommTrace() as tr0:
+    out0 = run(mlp, (hspec,), hspec, xin)
+with planner.install_profile(prof), CommTrace() as tr1:
+    out1 = run(mlp, (hspec,), hspec, xin)
+flows0 = [e.flow for e in tr0.events]
+flows1 = [e.flow for e in tr1.events]
+print(f"auto MLP flows: analytic {flows0} -> measured {flows1}")
+assert flows1 == ["ring_fused", "rs_epilogue"], flows1
+assert all(e.est_source == "measured" for e in tr1.events)
+assert (out0 == out1).all()                      # the flip is bit-identical
+print("measured profile flipped the call site to the fused ring flows; "
+      "outputs bit-identical")

@@ -11,7 +11,10 @@ Section 9 walks the backward-overlapped gradient sync: reverse-layer bucket
 programs fired inside backward via custom_vjp hooks, bit-identical to the
 barrier path.  Section 10 runs the continuous-batching serve engine
 (paged KV cache + one recorded CommProgram per decode step) through an
-admit -> prefill -> decode -> evict request lifecycle.
+admit -> prefill -> decode -> evict request lifecycle.  Section 11 races
+the collective-fused kernels (repro.kernels.collective): a measured
+profile steers a recorded program's all_gather onto the ring_fused flow,
+bit-identically.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -301,6 +304,52 @@ print(f"served {len(serve_metrics['finished'])} requests in "
       f"{serve_metrics['tokens_per_s']:.0f} tok/s; the per-step program "
       "lowered once and hit the fingerprint cache every step after")
 
+# 11. collective-fused kernels (repro.kernels.collective): ring-rotation
+#     flows that weave the collective *through* compute -- ring attention,
+#     gather prologues, reduce-scatter epilogues -- registered in the same
+#     algorithm registry as the Table II stages, so they trace, price, and
+#     race under algorithm="auto".  A measured CommProfile that prices the
+#     fused ring cheaper flips both the eager call site and a recorded
+#     program's joint plan onto ring_fused; the movement itself is
+#     bit-identical (it is the same blocks, interleaved with compute).
+from repro.tuning import (CommProfile, LinkModel,  # noqa: E402
+                          topology_fingerprint)
+
+fast = LinkModel(alpha=0.0, beta=1e-12, n=8, r2=1.0)
+slow = LinkModel(alpha=1.0, beta=1e-6, n=8, r2=1.0)
+fused_prof = CommProfile(topology_fingerprint(cube), models={
+    "ring_fused/cm/ici": fast, "rs_epilogue/cm/ici": fast,
+    "naive/naive/ici": slow, "direct/im/ici": slow, "direct/cm/ici": slow})
+
+ag_z = cube.comm("001")
+with ag_z.program(name="quickstart-fused") as fprog:
+    a = fprog.input(jax.ShapeDtypeStruct((1, 1, 1, 16), jnp.float32))
+    fprog.output(ag_z.all_gather(a, axis=3))
+
+with install_profile(fused_prof):
+    flow_lowered = fprog.lower()
+    fest = next(iter(flow_lowered.plan.estimates.values()))
+    assert fest.algorithm == "ring_fused", fest
+    assert fest.est_source == "measured"
+    with CommTrace() as ftrace:
+        fx = jnp.ones((2, 2, 2, 16), jnp.float32)
+        fout = jax.jit(shard_map(
+            lambda v: flow_lowered.execute(v), mesh=cube.mesh,
+            in_specs=P("x", "y", "z", None),
+            out_specs=P("x", "y", None, None), check_vma=False))(fx)
+fused_summary = ftrace.summary()
+print("fused-kernel trace summary:", fused_summary)
+assert [ev.flow for ev in ftrace.events] == ["ring_fused"]
+np.testing.assert_array_equal(          # same blocks, same bytes, same bits
+    np.asarray(fout),
+    np.asarray(jax.jit(shard_map(
+        lambda v: ag_z.all_gather(v, axis=3, algorithm="pidcomm"),
+        mesh=cube.mesh, in_specs=P("x", "y", "z", None),
+        out_specs=P("x", "y", None, None), check_vma=False))(fx)))
+print("measured profile steered the recorded program onto the fused ring "
+      f"flow (est {fest.seconds * 1e6:.2f}us measured), bit-identical "
+      "to the Table II gather")
+
 import json, os  # noqa: E402
 if os.environ.get("QUICKSTART_SUMMARY"):
     with open(os.environ["QUICKSTART_SUMMARY"], "w") as f:
@@ -314,6 +363,10 @@ if os.environ.get("QUICKSTART_SUMMARY"):
                    "backward_overlap": {
                        "bucket_order": bucket_order,
                        "summary": overlap_summary},
+                   "fused_kernels": {
+                       "summary": fused_summary,
+                       "flow": ftrace.events[0].flow,
+                       "est_source": ftrace.events[0].est_source},
                    "serving": {
                        "summary": serve_summary,
                        "steps": serve_metrics["steps"],

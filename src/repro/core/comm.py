@@ -267,7 +267,14 @@ _FLOW_TO_PLANNER = {
     "naive": "naive",
     "hierarchical": "pidcomm",
     "compressed": "compressed",
+    "ring_fused": "ring_fused",
+    "ag_prologue": "ag_prologue",
+    "rs_epilogue": "rs_epilogue",
 }
+
+# compute-fused flows (repro.kernels.collective) the auto planner may pick
+# when a measured profile prices them cheaper than the unfused stages
+_FUSED_FLOWS = frozenset(("ring_fused", "ag_prologue", "rs_epilogue"))
 
 
 def program_mod():
@@ -337,6 +344,12 @@ class Communicator:
             if (est.algorithm == "hierarchical" and primitive == "all_reduce"
                     and op == "add"):
                 return "hierarchical", est
+            if (est.algorithm in _FUSED_FLOWS
+                    and est.algorithm in _REGISTRY[primitive]):
+                # a measured profile priced a compute-fused ring flow
+                # cheaper than the unfused stages; run it as-is (without a
+                # consumer/tile_fn the bodies are plain ring collectives)
+                return est.algorithm, est
             if est.algorithm != "direct":
                 # the planner's pick is not executable here (e.g. a
                 # hierarchical split for a non-additive op); drop its
@@ -791,3 +804,12 @@ __all__ = [
     "PRIMITIVES", "STAGE_ORDER", "applicability", "get_algorithm",
     "register_algorithm", "registered_algorithms", "resolve_stage",
 ]
+
+# registration side effect: the compute-fused ring flows
+# (ring_fused / ag_prologue / rs_epilogue) live with their kernels in
+# repro.kernels.collective but must exist in the registry whenever comm is
+# importable -- auto dispatch, microbench sweeps, and conformance
+# accounting all resolve them by name.  Importing at the bottom keeps the
+# cycle safe: every name the kernel module pulls from here is defined by
+# now.
+import repro.kernels.collective  # noqa: E402,F401  (registers fused flows)

@@ -107,14 +107,39 @@ def _group_bytes(primitive: str, payload: float, g: int) -> float:
     }[primitive]
 
 
+# compute-fused ring flows (repro.kernels.collective) and the primitive
+# each one is registered under; the planner races them for that primitive
+# and validates explicit estimate requests against it
+_FUSED_PRIMITIVE = {
+    "ring_fused": "all_gather",
+    "ag_prologue": "all_gather",
+    "rs_epilogue": "reduce_scatter",
+}
+
+# ppermute ladders go HLO-quadratic past this group size (same bound as
+# comm._LADDER_MAX), so the fused ring candidates drop out of the race on
+# larger groups
+_FUSED_GROUP_MAX = 32
+
+
 def _table_ii_stage(primitive: str, algorithm: str) -> str:
-    """Map a planner flow onto the Table II stage it corresponds to."""
-    from repro.core.comm import resolve_stage
+    """Map a planner flow onto the stage label its estimates report.
+
+    Non-Table-II registry entries (hierarchical, compressed, the
+    compute-fused ring flows) carry their own stage label -- reuse it, so
+    estimate provenance never reports a bogus Table II stage for a flow
+    that is not a Table II row.  ``direct`` has no registry entry: it runs
+    the runtime's best native flow, whose Table II stage is the resolved
+    pidcomm stage."""
+    from repro.core.comm import get_algorithm, resolve_stage
     if algorithm == "naive":
         return "naive"
-    if algorithm == "compressed":
-        return "cm"  # §V-C: 8-bit payloads make CM applicable to arithmetic
-    # hierarchical / direct both run the runtime's best native flow
+    try:
+        spec = get_algorithm(primitive, algorithm)
+    except ValueError:
+        spec = None
+    if spec is not None and not spec.table_ii:
+        return spec.stage
     return resolve_stage(primitive, "pidcomm")
 
 
@@ -139,8 +164,14 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
     ``est_source="measured"``.  The byte terms stay analytic either way:
     they are structural properties of the flow.
     """
-    if algorithm not in ("pidcomm", "naive", "direct", "hierarchical",
-                         "compressed"):
+    if algorithm in _FUSED_PRIMITIVE:
+        want = _FUSED_PRIMITIVE[algorithm]
+        if primitive != want:
+            raise ValueError(
+                f"fused algorithm {algorithm!r} is an {want!r} flow, not "
+                f"{primitive!r}")
+    elif algorithm not in ("pidcomm", "naive", "direct", "hierarchical",
+                           "compressed"):
         raise ValueError(f"unknown planner algorithm {algorithm!r}")
     sel = cube.resolve_dims(dims)
     fast, slow = cube.split_fast_slow(sel)
@@ -170,6 +201,24 @@ def estimate(cube: Hypercube, primitive: str, dims, payload_bytes: float,
         sched = (f"allgather-full[{'x'.join(sel)}]", "local-modulate",
                  "local-slice")
         return _finish(primitive, "naive", sched, ici, dcn, "naive", profile)
+
+    if algorithm in _FUSED_PRIMITIVE:
+        # compute-fused ring flows (repro.kernels.collective): per-device
+        # bytes match the direct flow exactly -- the ring moves the same
+        # blocks, just interleaved with compute -- so the byte terms reuse
+        # the direct model and only the (measured) time term can separate
+        # fused from unfused.  Stage comes from the registry entry
+        # (non-Table-II), never from the Table II resolution.
+        ici = _group_bytes(primitive, payload_bytes, gf) if gf > 1 else 0.0
+        dcn = 0.0
+        if gs > 1:
+            dcn = _group_bytes(
+                primitive,
+                payload_bytes * (gf if primitive == "all_gather" else 1), gs)
+        hops = g - 1
+        sched = (f"ppermute-ring[{'x'.join(sel)}]x{hops}·fused-compute",)
+        return _finish(primitive, algorithm, sched, ici, dcn,
+                       _table_ii_stage(primitive, algorithm), profile)
 
     if (algorithm != "direct" and primitive == "all_reduce"
             and gs > 1 and gf > 1):
@@ -241,6 +290,9 @@ _REQUEST_TO_PLANNER = {
     "naive": "naive",
     "hierarchical": "pidcomm",
     "compressed": "compressed",
+    "ring_fused": "ring_fused",
+    "ag_prologue": "ag_prologue",
+    "rs_epilogue": "rs_epilogue",
 }
 
 
@@ -514,15 +566,20 @@ def plan(cube: Hypercube, primitive: str, dims, payload_bytes: float, *,
     if allow_compressed and primitive == "all_reduce" \
             and cube.crosses_dcn(dims):
         algs.append("compressed")
+    if cube.group_size(cube.resolve_dims(dims)) <= _FUSED_GROUP_MAX:
+        algs += [a for a, p in _FUSED_PRIMITIVE.items() if p == primitive]
     cands = [estimate(cube, primitive, dims, payload_bytes, a,
                       profile=profile) for a in algs]
     measured = [e for e in cands if e.est_source == "measured"]
     if measured:
         cands = measured
-    # Tie-break away from naive: when the byte model can't separate the host
+    # Tie-break away from naive (when the byte model can't separate the host
     # flow from the native collective, the runtime still executes the native
-    # one, and the reported stage must reflect that.
-    return min(cands, key=lambda e: (e.seconds, e.algorithm == "naive"))
+    # one, and the reported stage must reflect that) and away from the fused
+    # ring flows (their byte model ties direct exactly, so analytically they
+    # never win -- only a measured profile can price them cheaper).
+    return min(cands, key=lambda e: (e.seconds, e.algorithm == "naive",
+                                     e.algorithm in _FUSED_PRIMITIVE))
 
 
 def matmul_time(m: int, n: int, k: int, dtype_bytes: int = 2) -> float:

@@ -5,6 +5,13 @@ running max / denominator / accumulator live in VMEM scratch across kv steps
 (the classic TPU flash schedule). Supports causal masking and sliding
 windows (paper-relevant: mixtral SWA-4096, gemma3 local:global).
 
+``q_offset``/``k_offset`` place the q/k blocks at global sequence positions
+(causal/window masks compare global positions), which is what lets the
+kernel attend one *shard-local* q block against one rotated kv block of the
+ring-attention schedule (``repro.kernels.collective``): each ppermute hop
+calls the kernel on the delivered block at its source offset and
+LSE-merges the partial outputs.
+
 Block shapes are MXU-aligned: (block_q, head_dim) x (block_k, head_dim)
 matmuls with block_q = block_k = 128 by default (head_dim 64..256 are all
 multiples of the 128-lane register tile in the minor dim after padding).
@@ -24,7 +31,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                   block_q: int, block_k: int, causal: bool, window: int,
-                  scale: float, n_kv: int):
+                  q_offset: int, k_offset: int, scale: float, n_kv: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -39,9 +46,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     v = v_ref[0].astype(jnp.float32)
     s = q @ k.T                                       # (bq, bk)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+    k_pos = k_offset + ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
     ok = jnp.ones((block_q, block_k), jnp.bool_)
     if causal:
@@ -68,15 +75,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
-                              "interpret"))
+    jax.jit, static_argnames=("causal", "window", "q_offset", "k_offset",
+                              "block_q", "block_k", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = -1,
+                    q_offset: int = 0, k_offset: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd), H % KV == 0.
 
-    GQA folded into the grid: head h uses kv head h * KV // H.
+    GQA folded into the grid: head h uses kv head h * KV // G.
+    ``q_offset``/``k_offset`` are the static global positions of q[0]/k[0]
+    (ring-attention hops, context-parallel prefill blocks); masks compare
+    global positions, so an off-diagonal (q block, kv block) pair masks
+    exactly as its slice of the full-sequence kernel would.
     """
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
@@ -93,7 +105,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
-        window=int(window), scale=hd ** -0.5, n_kv=n_kv)
+        window=int(window), q_offset=int(q_offset), k_offset=int(k_offset),
+        scale=hd ** -0.5, n_kv=n_kv)
 
     def kv_index(b, i, j):
         # b = batch * H + h  ->  kv row = batch * KV + h // G

@@ -5,7 +5,10 @@ from repro.kernels.attention import ref
 from repro.kernels.attention.flash import flash_attention as _pallas
 
 
-def flash_attention(q, k, v, *, causal=True, window=-1):
+def flash_attention(q, k, v, *, causal=True, window=-1, q_offset=0,
+                    k_offset=0):
     if jax.default_backend() == "tpu":
-        return _pallas(q, k, v, causal=causal, window=window)
-    return ref.flash_attention(q, k, v, causal=causal, window=window)
+        return _pallas(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset, k_offset=k_offset)
+    return ref.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, k_offset=k_offset)

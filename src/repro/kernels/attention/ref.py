@@ -3,5 +3,7 @@ repro.models.layers (itself validated against the naive O(S^2) form)."""
 from repro.models.layers import chunked_attention, reference_attention
 
 
-def flash_attention(q, k, v, *, causal=True, window=-1):
-    return chunked_attention(q, k, v, causal=causal, window=window)
+def flash_attention(q, k, v, *, causal=True, window=-1, q_offset=0,
+                    k_offset=0):
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, k_offset=k_offset)

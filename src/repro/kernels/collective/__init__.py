@@ -1,0 +1,42 @@
+"""Collective-fused kernels: comm woven through compute, registry-first.
+
+PID-Comm's last-mile lesson is that collectives should run *where the data
+lives* instead of bouncing a whole array through a mediator between
+kernels.  This package is the repo's analogue for the jax_pallas
+substrate: ring-rotation flows whose per-hop deliveries feed compute
+directly, registered in the algorithm registry (``ring.py``) so they
+dispatch, trace, microbench, and race under ``algorithm="auto"`` exactly
+like the Table II stages.
+
+Entry points:
+
+* :func:`ring_attention` -- sequence-parallel flash attention; kv blocks
+  rotate while the flash kv-loop consumes them (``ring_fused``).
+* :func:`all_gather_matmul` -- per-block prologue compute fused onto a
+  ring gather (``ag_prologue``; bit-identical).
+* :func:`matmul_reduce_scatter` -- lazy-tile matmul epilogue fused onto a
+  ring reduce-scatter (``rs_epilogue``; bit-identical on integer-valued
+  fp32, documented tolerance otherwise).
+
+``FUSED_ENTRIES`` is the accounting surface: the conformance meta-test
+requires one sweep cell per entry, so deleting a fused sweep fails the
+accounting the same way a missing Table II cell does.
+"""
+from repro.kernels.collective import ring as _ring  # registers the flows
+from repro.kernels.collective.attention import RING_ATTN_TOL, ring_attention
+from repro.kernels.collective.matmul import (all_gather_matmul,
+                                             matmul_reduce_scatter)
+from repro.kernels.collective.ring import dispatch_fused, take_block
+
+# (primitive, registry name, bit_identical?) -- the registered fused flows.
+# Conformance accounting in tests/test_conformance.py is keyed off this.
+FUSED_ENTRIES = (
+    ("all_gather", "ring_fused", True),       # pure movement w/o consumer
+    ("all_gather", "ag_prologue", True),      # row-wise map commutes
+    ("reduce_scatter", "rs_epilogue", False),  # ring sum order differs
+)
+
+__all__ = [
+    "FUSED_ENTRIES", "RING_ATTN_TOL", "all_gather_matmul", "dispatch_fused",
+    "matmul_reduce_scatter", "ring_attention", "take_block",
+]

@@ -1,0 +1,77 @@
+"""Ring attention: sequence-parallel flash attention over a communicator.
+
+Each shard keeps its query block resident and rotates its (k, v) block
+around the group's ring via the registered ``ring_fused`` all_gather flow;
+the flash kv-loop (``chunked_attention(..., partial=True)``) consumes each
+block the hop it lands, and the per-hop partials merge online-softmax
+style.  The full-sequence k/v (and the S x S score matrix) never
+materialize on any shard -- per-shard attention memory stays
+O(S_loc * S_loc) instead of O(S_loc * S_global).
+
+This replaces the ``all_gather(h, axis=1)`` + full-sequence attention pair
+in ``models.blocks.attn_block``'s context-parallel path when
+``ModelConfig.fused_comm`` is set (or when ``algorithm="auto"`` prices
+``ring_fused`` measured-cheaper).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.collective.ring import dispatch_fused
+from repro.models.layers import NEG_INF, chunked_attention, pvary_like
+
+__all__ = ["RING_ATTN_TOL", "ring_attention"]
+
+# Documented accuracy budget vs the gather-then-attend oracle.  The per-hop
+# partials are merged by online-softmax rescaling, which reorders the
+# exp/sum against the single-pass softmax -- bit-identity is impossible by
+# construction, so conformance asserts these absolute tolerances instead
+# (tests/test_collective_kernels.py + the fused conformance cells).
+RING_ATTN_TOL = {"float32": 2e-5, "bfloat16": 2e-2}
+
+
+def ring_attention(comm, q, k, v, *, causal: bool = True, window=-1,
+                   chunk: int = 1024):
+    """Sequence-parallel attention over ``comm``'s ring.
+
+    q: (B, S_loc, H, hd) -- this shard's query block; k, v:
+    (B, S_loc, KV, hd) -- this shard's key/value block.  The global
+    sequence is the concatenation of the shards' blocks in group order, so
+    global positions are ``rank * S_loc + arange(S_loc)`` (the same
+    convention as ``attn_block``'s context-parallel q_offset).
+
+    Returns (B, S_loc, H, hd): this shard's rows of the full-sequence
+    attention, within ``RING_ATTN_TOL[dtype]`` of the oracle.
+    """
+    B, S_loc, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if comm.group_size == 1:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 chunk=chunk)
+    q_off = comm.axis_index() * S_loc
+
+    def consume(state, src, kv_block):
+        kb, vb = kv_block
+        acc, m, l = state
+        acc_h, m_h, l_h = chunked_attention(
+            q, kb, vb, causal=causal, window=window, q_offset=q_off,
+            k_offset=src * S_loc, chunk=chunk, partial=True)
+        m_new = jnp.maximum(m, m_h)
+        c = jnp.exp(m - m_new)
+        c_h = jnp.exp(m_h - m_new)
+        return (acc * c[..., None] + acc_h * c_h[..., None],
+                m_new,
+                l * c + l_h * c_h)
+
+    init = (
+        pvary_like(jnp.zeros((B, KV, G, S_loc, hd), jnp.float32), q, k, v),
+        pvary_like(jnp.full((B, KV, G, S_loc), NEG_INF, jnp.float32),
+                   q, k, v),
+        pvary_like(jnp.zeros((B, KV, G, S_loc), jnp.float32), q, k, v),
+    )
+    acc, m, l = dispatch_fused(comm, "all_gather", "ring_fused", (k, v),
+                               axis=1, consume_fn=consume, init=init)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S_loc, H, hd)
+    return out.astype(q.dtype)

@@ -1,0 +1,65 @@
+"""Matmul comm fusions: all-gather prologues and reduce-scatter epilogues.
+
+The tensor-parallel blocks in ``models.blocks`` bracket every matmul with a
+sequence all_gather (assemble activations) and a reduce_scatter (fold the
+partial sums).  These wrappers push that movement *into* the compute via
+the registered ring flows, so the bracketing arrays never materialize:
+
+* :func:`all_gather_matmul` -- ``ag_prologue``: row-wise compute (norm +
+  up-projection) runs per source block as the ring delivers it.
+  Bit-identical to compute-after-gather because row-wise maps commute with
+  sequence concatenation.
+* :func:`matmul_reduce_scatter` -- ``rs_epilogue``: the output projection's
+  partial product is produced one 1/G tile at a time inside the ring
+  reduce-scatter, so peak activation drops by the group size.  The ring's
+  summation order differs from the native psum-scatter: integer-valued
+  fp32 payloads are bit-identical (the conformance contract); real-valued
+  ones agree to documented tolerance.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.kernels.collective.ring import dispatch_fused, take_block
+
+__all__ = ["all_gather_matmul", "matmul_reduce_scatter"]
+
+
+def all_gather_matmul(comm, x, *, axis: int, block_fn):
+    """Fused gather-then-map: ``block_fn(all_gather(x, axis))`` with
+    ``block_fn`` applied per delivered block.  ``block_fn`` must be
+    row-wise along ``axis`` (rms_norm / matmuls over the trailing dim
+    qualify) -- that is what makes the fusion bit-identical."""
+    if comm.group_size == 1:
+        return block_fn(x)
+    return dispatch_fused(comm, "all_gather", "ag_prologue", x,
+                          axis=axis, block_fn=block_fn)
+
+
+def matmul_reduce_scatter(comm, h, w, *, axis: int, op: str = "add"):
+    """Fused ``reduce_scatter(h @ w, axis)``: tile ``t`` of the partial
+    product is computed on demand (``h[tile t] @ w``) inside the ring, so
+    the full ``(..., L, n)`` partial sum is never live.  ``h``'s ``axis``
+    length must divide by the group size (the reduce_scatter contract)."""
+    g = comm.group_size
+    if g == 1:
+        return h @ w
+    L = h.shape[axis]
+    if L % g:
+        raise ValueError(
+            f"matmul_reduce_scatter: axis {axis} length {L} not divisible "
+            f"by group size {g}")
+    size = L // g
+
+    def tile_fn(t):
+        return take_block(h, t, size, axis=axis) @ w
+
+    # the logical pre-scatter buffer (g tiles of h @ w) never exists; its
+    # byte count is what the planner prices, so hand it over explicitly
+    tile = jax.eval_shape(tile_fn, 0)
+    payload = g * math.prod(tile.shape) * tile.dtype.itemsize
+    return dispatch_fused(comm, "reduce_scatter", "rs_epilogue", h,
+                          payload_bytes=payload, axis=axis, op=op,
+                          tile_fn=tile_fn)

@@ -103,20 +103,39 @@ def attn_block(cfg: ModelConfig, topo: Topology, w: dict, x_sp: Array, *,
     cross_src: encoder output (B, S_enc, D) full -- used as KV source for
     cross-attention (whisper decoder). Returns new x_sp (and optionally the
     full-seq K/V for prefill caching).
+
+    ``cfg.fused_comm`` reroutes the collectives through
+    ``repro.kernels.collective``: the tp gather fuses the pre-attention
+    norm into its ring (bit-identical), the context-parallel full-sequence
+    gather is replaced by ring attention (kv blocks rotate over the cp
+    ring, within the documented tolerance), and the out-projection's
+    reduce_scatter becomes a lazy-tile matmul epilogue.
     """
     tpc = topo.comm(topo.tp)
-    # gather seq over tp (within the cp chunk)
-    h = tpc.all_gather(x_sp, axis=1)                          # (B, S_cp, D)
-    hn = rms_norm(h, w[prefix + "ln"], cfg.norm_eps)
-    if cross_src is not None:
-        kv_src = cross_src
-        causal = False
-        window = FULL_WINDOW
-    elif topo.cp:
-        full = topo.comm(topo.cp).all_gather(h, axis=1)       # (B, S, D)
-        kv_src = rms_norm(full, w[prefix + "ln"], cfg.norm_eps)
+    fused = getattr(cfg, "fused_comm", False) and cross_src is None \
+        and not out_cache
+    if fused:
+        from repro.kernels.collective import (
+            all_gather_matmul, matmul_reduce_scatter, ring_attention)
+        # gather seq over tp with the norm fused into the ring; the cp
+        # gather disappears entirely -- k/v stay chunk-local and rotate
+        hn = all_gather_matmul(
+            tpc, x_sp, axis=1,
+            block_fn=lambda b: rms_norm(b, w[prefix + "ln"], cfg.norm_eps))
+        kv_src = hn                                           # (B, S_cp, D)
     else:
-        kv_src = hn
+        # gather seq over tp (within the cp chunk)
+        h = tpc.all_gather(x_sp, axis=1)                      # (B, S_cp, D)
+        hn = rms_norm(h, w[prefix + "ln"], cfg.norm_eps)
+        if cross_src is not None:
+            kv_src = cross_src
+            causal = False
+            window = FULL_WINDOW
+        elif topo.cp:
+            full = topo.comm(topo.cp).all_gather(h, axis=1)   # (B, S, D)
+            kv_src = rms_norm(full, w[prefix + "ln"], cfg.norm_eps)
+        else:
+            kv_src = hn
     q, k, v = _split_qkv(cfg, topo, hn, kv_src, w, prefix)
     B, Sq = q.shape[:2]
     if cfg.qk_norm and not prefix:
@@ -127,12 +146,22 @@ def attn_block(cfg: ModelConfig, topo: Topology, w: dict, x_sp: Array, *,
         q_off = lax.axis_index(topo.cp) * Sq
     if cross_src is None:
         q = rope(q, q_off + jnp.arange(Sq), cfg.rope_theta)
-        k = rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
-    o = chunked_attention(q, k, v, causal=causal, window=window,
-                          q_offset=q_off)
+        # fused: k is this shard's chunk, so its positions carry the same
+        # global offset as q; unfused: k is the assembled sequence from 0
+        k_off = q_off if fused else 0
+        k = rope(k, k_off + jnp.arange(k.shape[1]), cfg.rope_theta)
+    if fused and topo.cp:
+        o = ring_attention(topo.comm(topo.cp), q, k, v,
+                           causal=causal, window=window)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_off)
     o = o.reshape(B, Sq, -1)
-    out = o @ w[prefix + "wo"]                     # partial over tp
-    out = tpc.reduce_scatter(out, axis=1)
+    if fused:
+        out = matmul_reduce_scatter(tpc, o, w[prefix + "wo"], axis=1)
+    else:
+        out = o @ w[prefix + "wo"]                 # partial over tp
+        out = tpc.reduce_scatter(out, axis=1)
     y = x_sp + out
     if out_cache:
         # cache layout: sequence-sharded over sp, local kv heads
@@ -287,6 +316,20 @@ def _decode_out(p, vf, G):
 def dense_ffn(cfg, topo, w, x_sp, keys=("fln", "wg", "wu", "wd")):
     tpc = topo.comm(topo.tp)
     ln, wg, wu, wd = (w[k] for k in keys)
+    if getattr(cfg, "fused_comm", False):
+        from repro.kernels.collective import (
+            all_gather_matmul, matmul_reduce_scatter)
+
+        def up(b):
+            bn = rms_norm(b, ln, cfg.norm_eps)
+            return jax.nn.silu(bn @ wg) * (bn @ wu)
+
+        # norm + up-projection fused into the gather ring (row-wise, so
+        # bit-identical); the down-projection's partial sum is scattered
+        # tile-by-tile without ever materializing (B, S_cp, D) in full
+        h_act = all_gather_matmul(tpc, x_sp, axis=1, block_fn=up)
+        out = matmul_reduce_scatter(tpc, h_act, wd, axis=1)
+        return x_sp + out
     h = tpc.all_gather(x_sp, axis=1)
     hn = rms_norm(h, ln, cfg.norm_eps)
     out = (jax.nn.silu(hn @ wg) * (hn @ wu)) @ wd

@@ -82,6 +82,10 @@ class ModelConfig:
     etp: int = 1                   # per-expert tensor parallel
     serve_tp: int = 0              # cap on decode-time TP (0 = whole pod);
                                    # RWKV needs whole heads per shard
+    fused_comm: bool = False       # route attn_block/dense_ffn through the
+                                   # collective-fused kernels (ring attention
+                                   # over cp, matmul gather-prologues /
+                                   # scatter-epilogues over tp)
 
     # long-context capability marker (sub-quadratic attention memory)
     subquadratic: bool = False

@@ -16,7 +16,11 @@ bytes) and the measurement supplies the time; the pair becomes one
 Candidate set per cell mirrors :func:`repro.core.planner.plan`'s race:
 ``naive`` and ``direct`` everywhere, plus ``hierarchical`` for additive
 all-reduces whose group spans both domains (where the dispatcher escalates
-``direct`` away, it is skipped rather than mis-measured).
+``direct`` away, it is skipped rather than mis-measured), plus the
+compute-fused ring flows (``ring_fused``/``ag_prologue`` for all_gather,
+``rs_epilogue`` for reduce_scatter) so a tuned profile prices fused
+against unfused and ``algorithm="auto"`` can flip call sites between
+them.
 
 Program-level cells (the overlap sweep) measure *schedules* rather than
 single ops: :func:`measure_overlap_pair` times two independent collectives
@@ -51,6 +55,9 @@ _FLOW_TO_CANDIDATE = {
     "naive": "naive",
     "hierarchical": "hierarchical",
     "compressed": "compressed",
+    "ring_fused": "ring_fused",
+    "ag_prologue": "ag_prologue",
+    "rs_epilogue": "rs_epilogue",
 }
 
 
@@ -84,7 +91,15 @@ def _candidates(cube, primitive: str, dims) -> list[str]:
         return ["naive", "hierarchical"]
     if primitive == "broadcast":
         return ["naive"]             # single registered flow
-    return ["naive", "pidcomm"]
+    out = ["naive", "pidcomm"]
+    # compute-fused ring flows (repro.kernels.collective): sweeping them
+    # without a consumer/tile_fn times the pure ring movement, which is the
+    # comm term a measured profile prices against the unfused stages
+    if primitive == "all_gather":
+        out += ["ring_fused", "ag_prologue"]
+    elif primitive == "reduce_scatter":
+        out += ["rs_epilogue"]
+    return out
 
 
 def _smap_call(cube, f, in_specs, out_specs, *args):

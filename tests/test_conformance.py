@@ -153,6 +153,48 @@ def test_dtype_sweep(cube_ring8, dtype):
                            split_axis=0, concat_axis=0))
 
 
+# ---------------------------------------------------- collective-fused flows
+# The registered compute-fused ring flows (repro.kernels.collective) are
+# conformance cells like the Table II stages: dispatched by name through the
+# same Communicator entry points at every dim selection.  ring_fused /
+# ag_prologue are pure movement here (no consumer / identity block_fn), so
+# they must be bit-identical; rs_epilogue's ring sum is exact on the
+# integer-valued payloads (the suite's stage-equivalence contract).
+@pytest.mark.parametrize("alg", ["ring_fused", "ag_prologue"])
+@pytest.mark.parametrize("cube_name,bitmap", SELECTIONS)
+def test_fused_all_gather_conformance(cube_name, bitmap, alg, request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    comm = cube.comm(names)
+    nd = len(cube.dim_sizes)
+    rng = np.random.RandomState(17)
+    shape = tuple(cube.dim_sizes) + (3, 4)
+    x = rng.randn(*shape).astype(np.float32)
+    got = substrate.run_per_shard(
+        cube, lambda v: comm.all_gather(v, axis=nd, algorithm=alg), x)
+    want = oracles.all_gather(x, nd, idx, axis=0)
+    np.testing.assert_array_equal(got, want)  # bit-identical: pure movement
+
+
+@pytest.mark.parametrize("op", ["add", "min"])
+@pytest.mark.parametrize("alg", ["rs_epilogue"])
+@pytest.mark.parametrize("cube_name,bitmap", SELECTIONS)
+def test_fused_reduce_scatter_conformance(cube_name, bitmap, alg, op,
+                                          request):
+    cube = request.getfixturevalue(cube_name)
+    names, idx = _sel(cube, bitmap)
+    comm = cube.comm(names)
+    nd = len(cube.dim_sizes)
+    g = cube.group_size(names)
+    x = substrate.integer_payload(cube, (2, 8 * g), seed=g)
+    got = substrate.run_per_shard(
+        cube,
+        lambda v: comm.reduce_scatter(v, axis=nd + 1, op=op, algorithm=alg),
+        x)
+    want = oracles.reduce_scatter(x, nd, idx, axis=1, op=op)
+    np.testing.assert_array_equal(got, want)
+
+
 # -------------------------------------------------------- stage escalation
 def test_ladder_max_fallthrough(cube_ring8, monkeypatch):
     """im all_to_all beyond _LADDER_MAX falls through to the fused cm
@@ -280,19 +322,24 @@ _CELL_TESTS = {
 }
 
 
-def _swept_stages(test_fn):
-    """Stage values in a test function's parametrize marks."""
-    stages = set()
+def _swept_params(test_fn, name):
+    """Values a parametrize mark sweeps for argument ``name``."""
+    vals = set()
     for mark in getattr(test_fn, "pytestmark", []):
         if mark.name != "parametrize":
             continue
         names = [n.strip() for n in mark.args[0].split(",")]
-        if "stage" not in names:
+        if name not in names:
             continue
-        i = names.index("stage")
+        i = names.index(name)
         for val in mark.args[1]:
-            stages.add(val[i] if isinstance(val, tuple) else val)
-    return stages
+            vals.add(val[i] if isinstance(val, tuple) else val)
+    return vals
+
+
+def _swept_stages(test_fn):
+    """Stage values in a test function's parametrize marks."""
+    return _swept_params(test_fn, "stage")
 
 
 def test_every_table_ii_cell_is_swept():
@@ -303,3 +350,36 @@ def test_every_table_ii_cell_is_swept():
         assert set(stages) <= swept, (
             f"unswept stages for {prim}: {set(stages) - swept}")
         assert "pidcomm" in swept, f"pidcomm alias unswept for {prim}"
+
+
+# Which conformance test carries each fused flow's sweep (same accounting
+# contract as _CELL_TESTS: the meta-test reads the live parametrize marks,
+# so deleting a fused sweep or dropping a selection fails here).
+_FUSED_CELL_TESTS = {
+    "all_gather": test_fused_all_gather_conformance,
+    "reduce_scatter": test_fused_reduce_scatter_conformance,
+}
+
+
+def _swept_cells(test_fn):
+    """(cube_name, bitmap) pairs in a test function's parametrize marks."""
+    cells = set()
+    for mark in getattr(test_fn, "pytestmark", []):
+        if mark.name != "parametrize":
+            continue
+        names = [n.strip() for n in mark.args[0].split(",")]
+        if names[:2] == ["cube_name", "bitmap"]:
+            cells.update(tuple(v[:2]) for v in mark.args[1])
+    return cells
+
+
+def test_every_fused_entry_is_swept():
+    """Meta-test: every registered fused flow (collective.FUSED_ENTRIES) is
+    swept as a conformance cell at every dim selection."""
+    from repro.kernels.collective import FUSED_ENTRIES
+    for prim, alg, _bit_identical in FUSED_ENTRIES:
+        fn = _FUSED_CELL_TESTS[prim]
+        assert alg in _swept_params(fn, "alg"), (
+            f"unswept fused flow {prim}/{alg}")
+        missing = set(SELECTIONS) - _swept_cells(fn)
+        assert not missing, f"fused {prim} sweep missing cells: {missing}"

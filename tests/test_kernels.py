@@ -35,6 +35,57 @@ def test_flash_attention_sweep(dtype, B, S, H, KV, hd, causal, window):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 128, 8, 2, 64),     # GQA 4:1
+])
+@pytest.mark.parametrize("causal,window,q_off,k_off", [
+    (True, -1, 64, 0),      # q block placed later in the sequence
+    (True, -1, 128, 64),    # both blocks offset (a ring-attention hop)
+    (True, 96, 32, 0),      # sliding window across offset positions
+])
+def test_flash_attention_offset_sweep(dtype, B, S, H, KV, hd, causal,
+                                      window, q_off, k_off):
+    """q_offset/k_offset place the blocks at global positions: the kernel's
+    masks must match the jnp oracle's (ref.py) at the same offsets."""
+    from repro.kernels.attention import ref
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_off, k_offset=k_off,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_off, k_offset=k_off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [-1, 96])
+def test_flash_offset_equals_full_sequence_slice(dtype, window):
+    """The ring/context-parallel contract: running the kernel on a q slice
+    at its global q_offset (full k visible) reproduces exactly those rows
+    of the full-sequence result."""
+    B, S, H, KV, hd, blk = 1, 256, 8, 2, 64, 64    # GQA 4:1
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    full = reference_attention(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for q0 in (64, 192):
+        got = flash_attention(q[:, q0:q0 + blk], k, v, causal=True,
+                              window=window, q_offset=q0,
+                              block_q=64, block_k=64, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(full[:, q0:q0 + blk], np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("G,b,D", [(4, 8, 128), (8, 16, 64), (16, 4, 256)])
 def test_tile_swizzle_sweep(dtype, G, b, D):
     x = jax.random.normal(jax.random.PRNGKey(1), (G * b, D), dtype)

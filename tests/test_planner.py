@@ -69,3 +69,49 @@ def test_estimate_rejects_unknown_algorithm(pod_cube):
     with pytest.raises(ValueError, match="unknown planner algorithm"):
         planner.estimate(pod_cube, "all_reduce", ("dp",), PAYLOAD,
                          algorithm="warp")
+
+
+def test_fused_estimate_stage_provenance(pod_cube):
+    """Fused flows are not Table II rows: their estimates must report the
+    registry entry's own stage label (the non-table_ii path), never the
+    Table II stage the primitive would resolve to."""
+    from repro.core.comm import get_algorithm, resolve_stage
+    for alg, prim in sorted(planner._FUSED_PRIMITIVE.items()):
+        est = planner.estimate(pod_cube, prim, ("tp",), PAYLOAD,
+                               algorithm=alg)
+        spec = get_algorithm(prim, alg)
+        assert not spec.table_ii
+        assert est.algorithm == alg
+        assert est.stage == spec.stage == "cm"
+        assert "fused-compute" in est.schedule[0]
+        # byte model matches the direct flow: the ring moves the same blocks
+        direct = planner.estimate(pod_cube, prim, ("tp",), PAYLOAD,
+                                  algorithm="direct")
+        assert est.ici_bytes == direct.ici_bytes
+        assert est.dcn_bytes == direct.dcn_bytes
+    # the witness that provenance is NOT routed through resolve_stage:
+    # reduce_scatter's Table II ladder tops at "im", but rs_epilogue's
+    # estimates must keep the registry's "cm" label
+    assert resolve_stage("reduce_scatter", "pidcomm") == "im"
+    rs = planner.estimate(pod_cube, "reduce_scatter", ("tp",), PAYLOAD,
+                          algorithm="rs_epilogue")
+    assert rs.stage == "cm" != resolve_stage("reduce_scatter", "pidcomm")
+
+
+def test_fused_estimate_rejects_wrong_primitive(pod_cube):
+    with pytest.raises(ValueError, match="flow, not"):
+        planner.estimate(pod_cube, "all_reduce", ("dp",), PAYLOAD,
+                         algorithm="ring_fused")
+    with pytest.raises(ValueError, match="flow, not"):
+        planner.estimate(pod_cube, "all_gather", ("dp",), PAYLOAD,
+                         algorithm="rs_epilogue")
+
+
+def test_plan_fused_candidates_require_measured_profile(pod_cube):
+    """Analytically the fused candidates tie the direct flow byte-for-byte,
+    and the tie-break keeps direct -- only a measured profile showing the
+    fused ring actually faster may flip the pick (cf. test_tuning)."""
+    est = planner.plan(pod_cube, "all_gather", ("tp",), PAYLOAD)
+    assert est.algorithm not in planner._FUSED_PRIMITIVE
+    est = planner.plan(pod_cube, "reduce_scatter", ("tp",), PAYLOAD)
+    assert est.algorithm not in planner._FUSED_PRIMITIVE

@@ -200,6 +200,57 @@ def test_measured_auto_dispatch_bit_identical(cube_ring8):
     assert s["by_flow"]["all_to_all/naive"]["est_source"] == "measured"
 
 
+def _fused_favoring_profile(cube):
+    """Synthetic measured profile that prices the compute-fused ring flows
+    (repro.kernels.collective) below every unfused candidate."""
+    fast = LinkModel(alpha=0.0, beta=1e-12, n=8, r2=1.0)
+    slow = LinkModel(alpha=1.0, beta=1e-6, n=8, r2=1.0)
+    return CommProfile(topology_fingerprint(cube), models={
+        "ring_fused/cm/ici": fast,
+        "rs_epilogue/cm/ici": fast,
+        "naive/naive/ici": slow,
+        "direct/im/ici": slow,
+        "direct/cm/ici": slow,
+    })
+
+
+def test_measured_auto_flips_mlp_call_site_to_fused(cube_ring8):
+    """Acceptance (collective-fused kernels): at a tensor-parallel MLP call
+    site -- sequence all_gather, up/down matmuls, reduce_scatter of the
+    partial sums -- a measured profile favoring the fused ring flows flips
+    ``algorithm="auto"`` from the unfused direct collectives to
+    ``ring_fused`` + ``rs_epilogue``, execution stays bit-identical on
+    integer payloads (the documented epilogue/prologue contract), and every
+    event is measured-priced."""
+    comm = cube_ring8.comm("d")
+    x = substrate.integer_payload(cube_ring8, (4, 6), seed=21)  # (8, 4, 6)
+    w = np.random.RandomState(21).randint(-3, 4, (6, 6)).astype(np.float32)
+
+    def mlp(v):                       # v: (1, 4, 6) shard of the sequence
+        h = comm.all_gather(v, axis=1)            # (1, 32, 6) assembled
+        return comm.reduce_scatter(h @ w, axis=1)  # partial sums folded
+
+    with CommTrace() as tr0:
+        got0 = substrate.run_per_shard(cube_ring8, mlp, x)
+    assert [e.flow for e in tr0.events] == ["cm", "im"]  # unfused analytic
+    assert all(e.est_source == "analytic" for e in tr0.events)
+
+    prof = _fused_favoring_profile(cube_ring8)
+    with planner.install_profile(prof), CommTrace() as tr:
+        got = substrate.run_per_shard(cube_ring8, mlp, x)
+    assert [e.flow for e in tr.events] == ["ring_fused", "rs_epilogue"]
+    assert all(e.est_source == "measured" for e in tr.events)
+    np.testing.assert_array_equal(got, got0)       # bit-identical flip
+    want = oracles.reduce_scatter(
+        oracles.all_gather(x, 1, (0,), axis=0) @ w, 1, (0,), axis=0)
+    np.testing.assert_array_equal(got, want)
+    s = tr.summary()
+    assert s["est_sources"] == {"measured": 2}
+    assert s["by_flow"]["all_gather/ring_fused"]["est_source"] == "measured"
+    assert s["by_flow"]["reduce_scatter/rs_epilogue"]["est_source"] \
+        == "measured"
+
+
 def test_measured_program_plan_and_execute(cube_ring8):
     """The deferred path: plan_program under the inverting profile picks
     naive for the recorded op, execution emits measured events, result is
