@@ -49,10 +49,7 @@ def bench_batch(cfg, B: int, *, n_requests: int, s_ctx: int, seed: int):
                          max_new_range=(2, 3), vocab=cfg.vocab_size,
                          seed=seed + 1)
     eng.run(warm)
-    eng.step_wall.clear()
-    eng.token_wall.clear()
-    eng.finished.clear()
-    eng.programs_recorded = 0
+    eng.reset_metrics()               # warmup boundary
 
     trace = poisson_trace(n_requests, rate=max(1.0, B / 2),
                           plen_range=(4, 12), max_new_range=(4, 10),
@@ -60,6 +57,14 @@ def bench_batch(cfg, B: int, *, n_requests: int, s_ctx: int, seed: int):
     for r in trace:
         r.arrival += eng.step_idx     # trace is relative to "now"
     metrics = eng.run(trace)
+    # single measurement path: the latency/throughput cells come from the
+    # engine's own metrics registry (run() populates its dict from the
+    # same registry, so these agree by construction)
+    metrics["tokens_per_s"] = eng.metrics.value("serve.tokens_per_s")
+    metrics["p50_token_s"] = eng.metrics.quantile("serve.token_seconds",
+                                                  0.50)
+    metrics["p99_token_s"] = eng.metrics.quantile("serve.token_seconds",
+                                                  0.99)
     lowered = eng.last_program.lower()
     metrics["plan_est_us"] = lowered.plan.seconds * 1e6
     metrics["serial_est_us"] = lowered.plan.serial_seconds * 1e6

@@ -188,7 +188,55 @@ def train_step_bench():
               - rows["overlap"]["plan_est_us"])
     emit(f"train_step/{ARCH}/comm_hidden_us", hidden,
          "barrier_exposed_minus_overlap_exposed")
-    return [rows["barrier"], rows["overlap"]]
+
+    overhead = telemetry_overhead_bench(cfg, topo, steps["barrier"],
+                                        variants["barrier"], batch,
+                                        disabled_us=rows["barrier"]
+                                        ["measured_us"])
+    return [rows["barrier"], rows["overlap"], overhead]
+
+
+def telemetry_overhead_bench(cfg, topo, step_fn, tc, batch, *,
+                             disabled_us: float):
+    """``telemetry_overhead`` row: the barrier step re-timed with metrics
+    enabled and a Tracer active, including the per-step bookkeeping
+    ``Trainer.run`` does on the enabled path (span + counter + histogram).
+    ``measured_us`` is the enabled step; ``plan_est_us``/``serial_est_us``
+    carry the disabled baseline (the already-gated ``train_step_barrier``
+    cell), so the gate tracks the enabled path and the ratio of the two
+    columns is the relative overhead -- "disabled within noise of the
+    pre-PR step" is enforced by the unchanged ``train_step_barrier`` row.
+
+    The Tracer sees no CommEvents here (the step is already compiled;
+    dispatch happens at trace time), so this prices exactly the
+    steady-state cost a metered production loop pays per step.
+    """
+    from repro import telemetry
+
+    params, opt_state = _fresh_state(cfg, topo, tc)
+    inner = _step_timer(step_fn, params, opt_state, batch)
+
+    def call():
+        with telemetry.maybe_span("train-step", cat="wall"):
+            inner()
+        telemetry.inc("train.steps")
+        telemetry.observe("train.step_seconds", 0.0)
+
+    telemetry.enable_metrics()
+    try:
+        with telemetry.Tracer():
+            us = bench(call, warmup=2, reps=7)
+    finally:
+        telemetry.disable_metrics()
+        telemetry.REGISTRY.reset()
+    emit(f"train_step/{ARCH}/telemetry_overhead", us,
+         f"disabled_us={disabled_us:.1f}"
+         f";overhead_ratio={us / disabled_us:.4f}")
+    return {"name": "telemetry_overhead", "ops": 2,
+            "measured_us": round(us, 2),
+            "plan_est_us": round(disabled_us, 2),
+            "serial_est_us": round(disabled_us, 2),
+            "est_source": "measured"}
 
 
 def run():

@@ -350,8 +350,93 @@ print("measured profile steered the recorded program onto the fused ring "
       f"flow (est {fest.seconds * 1e6:.2f}us measured), bit-identical "
       "to the Table II gather")
 
-import json, os  # noqa: E402
+# 12. unified telemetry (repro.telemetry): one Tracer captures a span
+#     timeline across a train step and the serving engine.  While the
+#     tracer is active it sits on the comm trace stack, so every live
+#     CommEvent becomes a child span under whatever span is open --
+#     carrying flow/stage/est_source/program_id/fused_from provenance --
+#     and lower-cache hits annotate the timeline as instant marks.  The
+#     metrics registry counts what the narrative above only printed, and
+#     a drift monitor catches a synthetically mis-scaled profile: the
+#     fused ring's real wall time sits far outside the band around the
+#     profile's (absurdly fast) measured estimate, so exactly one
+#     structured ProfileStalenessWarning names the stale
+#     (flow, stage, domain) and carries the retune recipe.
+import json  # noqa: E402
+import time  # noqa: E402
+import warnings  # noqa: E402
+
+from repro import telemetry  # noqa: E402
+
+engine.reset_metrics()                   # warmup boundary: fresh registry
+steps_before12 = engine.step_idx         # run() reports cumulative steps
+telemetry.enable_metrics()
+with telemetry.Tracer() as tracer:
+    with tracer.span("train-step", cat="wall"):
+        # fresh jit -> retrace -> the step's grad-sync dispatches land as
+        # child spans under the train-step envelope
+        jax.block_until_ready(jax.jit(shard_map(
+            barrier_grads, mesh=prod.mesh, in_specs=(tspecs, P()),
+            out_specs=tspecs, check_vma=False))(tree, b9))
+    req12 = Request(rid=9, prompt=[6, 2, 8, 3], max_new=3,
+                    arrival=engine.step_idx)
+    serve12 = engine.run([req12])        # serve-step spans + children
+telemetry.disable_metrics()
+
+chrome = json.loads(tracer.chrome_trace_json())   # Perfetto-loadable
+evs = chrome["traceEvents"]
+serve_spans = [e for e in evs if e.get("name") == "serve-step"]
+prog_children = [e for e in evs if e.get("cat") == "comm"
+                 and e["args"].get("program_id") == "serve-step"]
+assert serve_spans, "each engine decode step opens a serve-step span"
+assert prog_children, "the step program's ops land as comm child spans"
+assert all("est_source" in e["args"] and "fused_from" in e["args"]
+           for e in prog_children)
+assert any(e.get("name") == "lower-cache-hit" for e in evs), \
+    "warm-cache lowerings annotate the timeline"
+snap = telemetry.REGISTRY.snapshot()
+steps12 = serve12["steps"] - steps_before12
+assert telemetry.REGISTRY.value("comm.dispatches") > 0
+assert telemetry.REGISTRY.value("program.lower_cache_hits") >= steps12
+assert engine.metrics.value("serve.steps") == steps12
+assert serve12["p50_token_s"] == engine.metrics.quantile(
+    "serve.token_seconds", 0.50)
+print(f"telemetry: {len(serve_spans)} serve-step spans, "
+      f"{len(prog_children)} per-op child spans with provenance, "
+      f"{sum(e.get('name') == 'lower-cache-hit' for e in evs)} "
+      "lower-cache-hit marks; engine registry is the measurement path")
+
+mon = telemetry.DriftMonitor(min_samples=1)     # judge on first residual
+t12 = time.perf_counter()
+with install_profile(fused_prof):
+    jax.block_until_ready(jax.jit(shard_map(
+        lambda v: flow_lowered.execute(v), mesh=cube.mesh,
+        in_specs=P("x", "y", "z", None),
+        out_specs=P("x", "y", None, None), check_vma=False))(fx))
+wall12 = time.perf_counter() - t12
+with warnings.catch_warnings(record=True) as wlist:
+    warnings.simplefilter("always")
+    for ev in ftrace.events:     # measured-sourced, priced ~0 by fused_prof
+        mon.observe_event(ev, measured_s=wall12)
+stale = [w.message for w in wlist
+         if isinstance(w.message, telemetry.ProfileStalenessWarning)]
+assert len(stale) == 1, "exactly one structured warning per stale key"
+sw = stale[0]
+assert (sw.flow, sw.stage, sw.domain) == ("ring_fused", "cm", "ici")
+assert "Tuner" in sw.recipe or "tune" in sw.recipe.lower()
+print(f"drift monitor flagged ({sw.flow}, {sw.stage}, {sw.domain}): "
+      f"median meas_over_est={sw.median:.3g} outside "
+      f"[{sw.band[0]:g}, {sw.band[1]:g}] -- {sw.recipe}")
+
+import os  # noqa: E402
 if os.environ.get("QUICKSTART_SUMMARY"):
+    out_dir = os.path.dirname(os.environ["QUICKSTART_SUMMARY"]) or "."
+    with open(os.path.join(out_dir, "quickstart_chrome_trace.json"),
+              "w") as f:
+        f.write(tracer.chrome_trace_json())
+    with open(os.path.join(out_dir, "quickstart_metrics.json"), "w") as f:
+        json.dump({"global": snap, "engine": engine.metrics.snapshot(),
+                   "drift": mon.summary()}, f, indent=1)
     with open(os.environ["QUICKSTART_SUMMARY"], "w") as f:
         json.dump({"eager": trace.summary(), "program": summary,
                    "tuned": tuned_summary,
@@ -372,6 +457,14 @@ if os.environ.get("QUICKSTART_SUMMARY"):
                        "steps": serve_metrics["steps"],
                        "tokens_per_s": serve_metrics["tokens_per_s"],
                        "programs_recorded":
-                           serve_metrics["programs_recorded"]}},
+                           serve_metrics["programs_recorded"]},
+                   "telemetry": {
+                       "serve_step_spans": len(serve_spans),
+                       "comm_child_spans": len(prog_children),
+                       "lower_cache_hit_marks": sum(
+                           e.get("name") == "lower-cache-hit" for e in evs),
+                       "metrics": {k: snap[k] for k in sorted(snap)},
+                       "stale": mon.summary()["stale"]}},
                   f, indent=1)
-    print("wrote", os.environ["QUICKSTART_SUMMARY"])
+    print("wrote", os.environ["QUICKSTART_SUMMARY"],
+          "quickstart_chrome_trace.json quickstart_metrics.json")

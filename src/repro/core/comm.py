@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import planner
 from repro.core.hypercube import Hypercube
+from repro.telemetry import metrics as _telemetry
 
 Array = jax.Array
 
@@ -396,11 +397,14 @@ class Communicator:
         payload = _payload_bytes(x)
         flow, est = self._resolve_flow(primitive, alg, payload, op)
         spec = get_algorithm(primitive, flow)
-        if _TRACES:
+        if _TRACES or _telemetry.enabled():
             if est is None:
                 est = planner.estimate(
                     self.cube, primitive, self.dims, payload,
                     algorithm=_FLOW_TO_PLANNER.get(flow, "direct"))
+            _telemetry.inc("comm.dispatches")
+            _telemetry.inc(f"comm.est_source.{est.est_source}")
+        if _TRACES:
             program_id, fused_from = _meta if _meta else (None, ())
             _emit(CommEvent(
                 primitive=primitive, bitmap=self.bitmap, dims=self.dims,
@@ -466,10 +470,13 @@ class Communicator:
                 else 1
             x = x + error / gf
         payload = _payload_bytes(x)
-        if _TRACES:
+        if _TRACES or _telemetry.enabled():
             est = planner.estimate(self.cube, "all_reduce", self.dims,
                                    payload, algorithm="compressed",
                                    block=block)
+            _telemetry.inc("comm.dispatches")
+            _telemetry.inc(f"comm.est_source.{est.est_source}")
+        if _TRACES:
             _emit(CommEvent(
                 primitive="all_reduce", bitmap=self.bitmap, dims=self.dims,
                 algorithm="compressed", flow="compressed", stage="cm",

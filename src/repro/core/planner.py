@@ -23,6 +23,7 @@ from typing import Mapping
 import numpy as np
 
 from repro.core.hypercube import Hypercube
+from repro.telemetry import metrics as _telemetry
 
 PEAK_BF16_FLOPS = 197e12
 HBM_BW = 819e9
@@ -531,6 +532,12 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
         src = "measured"
     else:
         src = "mixed"
+    serial = sum(e.seconds for e in est.values())
+    if _telemetry.enabled():
+        _telemetry.inc("planner.plan_program_calls")
+        _telemetry.inc(f"planner.est_source.{src}")
+        _telemetry.observe("planner.plan_seconds_us", seconds * 1e6)
+        _telemetry.observe("planner.serial_seconds_us", serial * 1e6)
     return ProgramPlan(
         estimates=est,
         order=tuple(oid for wave in levels for oid in wave),
@@ -538,7 +545,7 @@ def plan_program(cube: Hypercube, ops, *, profile=None) -> ProgramPlan:
         ici_bytes=sum(e.ici_bytes for e in est.values()),
         dcn_bytes=sum(e.dcn_bytes for e in est.values()),
         seconds=seconds,
-        serial_seconds=sum(e.seconds for e in est.values()),
+        serial_seconds=serial,
         est_source=src)
 
 

@@ -60,6 +60,8 @@ import jax
 import numpy as np
 
 from repro.core import planner
+from repro.telemetry import metrics as _telemetry
+from repro.telemetry import spans as _spans
 
 # Coalescing folds all-reduces at or below this per-device payload into one
 # bucketed dispatch (gradient-leaf scale; large tensors keep their own op).
@@ -423,31 +425,48 @@ class CommProgram:
             hit = cache.get(key)
             if hit is not None:
                 LOWER_STATS["cache_hits"] += 1
+                _telemetry.inc("program.lower_cache_hits")
+                _spans.maybe_instant("lower-cache-hit",
+                                     program_id=self.program_id)
                 return dataclasses.replace(hit, program=self)
         LOWER_STATS["lowered"] += 1
-        ops = [dataclasses.replace(o) for o in self._ops]
-        out_vids = self._default_outputs()
-        if fuse:
-            ops = _fuse_rs_ag(self, ops, out_vids)
-        if split_all_reduce:
-            ops = _split_all_reduce(self, ops, mode=split_all_reduce)
-        if merge_a2a:
-            ops = _merge_all_to_all(self, ops, out_vids)
-        if coalesce:
-            ops = _coalesce(self, ops, max_bytes=coalesce_bytes)
-        produced = (set(self._consts) | set(self._input_vids)
-                    | {v for o in ops for v in o.out_vids})
-        lost = [v for v in out_vids if v not in produced]
-        if lost:
-            raise RuntimeError(
-                f"lowering {self.program_id} lost output values {lost} "
-                "(optimization-pass bug)")
-        plan = planner.plan_program(self.cube, [
-            planner.ProgramOpSpec(
-                op_id=o.op_id, primitive=o.primitive, dims=o.comm.dims,
-                payload_bytes=_op_payload_bytes(self, o),
-                deps=_dep_ids(o, ops), algorithm=o.algorithm, op=o.op)
-            for o in ops])
+        _telemetry.inc("program.lowered")
+        with _spans.maybe_span(f"lower:{self.program_id}", cat="trace",
+                               program_id=self.program_id,
+                               ops=len(self._ops)):
+            ops = [dataclasses.replace(o) for o in self._ops]
+            out_vids = self._default_outputs()
+            if fuse:
+                ops = _fuse_rs_ag(self, ops, out_vids)
+            if split_all_reduce:
+                ops = _split_all_reduce(self, ops, mode=split_all_reduce)
+            if merge_a2a:
+                ops = _merge_all_to_all(self, ops, out_vids)
+            if coalesce:
+                ops = _coalesce(self, ops, max_bytes=coalesce_bytes)
+            if _telemetry.enabled():
+                for o in ops:
+                    if not o.fused_from:
+                        continue
+                    if o.coalesced:
+                        _telemetry.inc("program.coalesced_ops")
+                    elif o.chain:
+                        _telemetry.inc("program.chained_ops")
+                    else:
+                        _telemetry.inc("program.fused_ops")
+            produced = (set(self._consts) | set(self._input_vids)
+                        | {v for o in ops for v in o.out_vids})
+            lost = [v for v in out_vids if v not in produced]
+            if lost:
+                raise RuntimeError(
+                    f"lowering {self.program_id} lost output values {lost} "
+                    "(optimization-pass bug)")
+            plan = planner.plan_program(self.cube, [
+                planner.ProgramOpSpec(
+                    op_id=o.op_id, primitive=o.primitive, dims=o.comm.dims,
+                    payload_bytes=_op_payload_bytes(self, o),
+                    deps=_dep_ids(o, ops), algorithm=o.algorithm, op=o.op)
+                for o in ops])
         order = {oid: i for i, oid in enumerate(plan.order)}
         ops = sorted(ops, key=lambda o: order[o.op_id])
         lowered = LoweredProgram(program=self, ops=tuple(ops), plan=plan,

@@ -25,6 +25,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.core.comm import CommTrace
+from repro.telemetry import drift as drift_mod
+from repro.telemetry import metrics as telemetry_metrics
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import ModelConfig
 from repro.models.lm import Model
@@ -140,7 +142,9 @@ def comm_drift(trace_summary: dict, collectives: dict) -> dict:
     planner recorded (planner/runtime drift).  The byte comparison is
     informational only -- the HLO additionally contains autodiff-transposed
     collectives the trace cannot see -- except in one direction: compiled
-    wire traffic *below* half the planned volume flags over-estimation.
+    wire traffic below the drift band's low edge
+    (:data:`repro.telemetry.drift.DEFAULT_BAND`, shared with the live
+    drift monitor) flags over-estimation.
     """
     expected: set[str] = set()
     flows = []
@@ -160,7 +164,8 @@ def comm_drift(trace_summary: dict, collectives: dict) -> dict:
     ratio = (hlo_bytes / trace_bytes) if trace_bytes > 0 else None
     drift = bool(missing) or (bool(flows) and trace_bytes > 0
                               and (hlo_bytes == 0
-                                   or (ratio is not None and ratio < 0.5)))
+                                   or (ratio is not None
+                                       and drift_mod.underrun(ratio))))
     return {"drift": drift, "missing_ops": missing,
             "checked_flows": sorted(flows),
             "expected_ops": sorted(expected), "hlo_ops": sorted(present),
@@ -217,6 +222,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
     trace = CommTrace()
     from repro.core import program as program_mod
     lower_stats0 = dict(program_mod.LOWER_STATS)
+    # per-cell telemetry scope: the comm/program/planner counters fired
+    # while this cell lowers land in a fresh registry (no cross-cell
+    # pollution), snapshotted into rec["telemetry"] below
+    tscope = telemetry_metrics.scoped_metrics()
     if shape["kind"] == "train":
         topo = build_topology(cfg, mesh, global_batch=shape["batch"])
         tc = TrainConfig()
@@ -224,7 +233,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
         pst = param_structs(cfg, topo)
         ost = opt_structs(cfg, topo, tc)
         bst = input_structs(cfg, topo, shape)
-        with trace:
+        with trace, tscope as treg:
             lowered = step.lower(pst, ost, bst)
     elif shape["kind"] == "prefill":
         topo = build_topology(cfg, mesh, global_batch=shape["batch"])
@@ -238,7 +247,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                        out_specs=(P(topo.dp, topo.tp), _prefill_cache_spec(
                            server, cfg, topo)),
                        check_vma=False)
-        with trace:
+        with trace, tscope as treg:
             lowered = jax.jit(fn).lower(param_structs(cfg, topo), bst)
     else:  # decode
         topo = build_serve_topology(cfg, mesh)
@@ -260,7 +269,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
                        in_specs=(specs, cspecs, P(ba), P(ba)),
                        out_specs=(P(ba, topo.tp), cspecs),
                        check_vma=False)
-        with trace:
+        with trace, tscope as treg:
             lowered = jax.jit(fn, donate_argnums=(1,)).lower(
                 param_structs(cfg, topo), cache_structs(cfg, topo, plan),
                 tok, pos)
@@ -275,6 +284,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
     rec["program_cache"] = {
         k: program_mod.LOWER_STATS[k] - lower_stats0[k]
         for k in program_mod.LOWER_STATS}
+    # metrics fired while the cell lowered (dispatch happens at trace
+    # time, so comm/program/planner instrumentation all landed in treg)
+    rec["telemetry"] = treg.snapshot()
     rec["lower_s"] = round(time.monotonic() - t0, 1)
 
     t1 = time.monotonic()

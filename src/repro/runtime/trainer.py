@@ -31,6 +31,8 @@ from repro.models.lm import Model
 from repro.models.params import param_defs, param_specs, ParamDef
 from repro.models.topology import Topology
 from repro.optim import adamw
+from repro.telemetry import metrics as _telemetry
+from repro.telemetry import spans as _spans
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +66,14 @@ class TrainConfig:
     # already interleaves the reductions.
     overlap_grad_sync: bool = True
     step_deadline_s: float = 0.0       # 0 = no straggler deadline
+    # Diagnostics mode for the telemetry step-time split: run the step as
+    # three separately-jitted phases (fwd+bwd / grad-sync / clip+opt) and
+    # time each into the ``train.*_seconds`` histograms, plus a
+    # separately-timed forward-only pass so the backward share is
+    # attributable (reverse-mode AD fuses fwd and bwd into one
+    # computation; the forward re-run is extra compute, which is why this
+    # is opt-in and not the production path).  Plain sync path only.
+    telemetry_split: bool = False
 
 
 def _spec_axes(spec) -> set:
@@ -304,6 +314,86 @@ def make_train_step(cfg: ModelConfig, topo: Topology, tc: TrainConfig):
     return jax.jit(fn, donate_argnums=(0, 1))
 
 
+def make_split_train_step(cfg: ModelConfig, topo: Topology,
+                          tc: TrainConfig):
+    """The train step as separately-jitted phases, for the telemetry
+    step-time split (``TrainConfig.telemetry_split``).
+
+    Returns ``(fwd, fwd_bwd, sync, opt)``:
+
+    * ``fwd(params, batch) -> (loss, aux)`` -- forward only, timed so the
+      backward share of ``fwd_bwd`` is attributable (bwd = fwd_bwd - fwd);
+    * ``fwd_bwd(params, batch) -> (loss, aux, grads)``;
+    * ``sync(grads) -> grads`` -- the explicit replicated-leaf gradient
+      sync; ``None`` on vma-tracking jax (autodiff already inserted the
+      reductions inside ``fwd_bwd``, so there is no separable phase);
+    * ``opt(params, opt_state, grads) -> (params, opt_state, metrics)`` --
+      global-norm clip + AdamW.
+
+    Phase boundaries materialize intermediates the fused step would keep
+    on-device, so the *sum* of phase times brackets, rather than equals,
+    the fused step time -- the split is for attribution, not for the
+    ``train_step`` bench rows.  Plain sync path only (no compressed pod
+    gradients / error feedback).
+    """
+    from repro import compat
+    if tc.compress_pod_grads:
+        raise ValueError(
+            "telemetry_split supports the plain gradient-sync path only "
+            "(compress_pod_grads records inside the fused step)")
+    model = Model(cfg, topo)
+    specs = param_specs(cfg, topo)
+    lr_fn = adamw.cosine_schedule(tc.lr, tc.warmup, tc.total_steps)
+    mesh = topo.cube.mesh
+    opt_specs = _opt_specs(cfg, topo, tc)
+    batch_specs = input_batch_specs(cfg, topo)
+    aux_specs = {k: P() for k in ("ce_loss", "aux_loss", "tokens")}
+
+    def fwd_shard(params, batch):
+        return model.loss_shard(params, batch)
+
+    def fwd_bwd_shard(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            model.loss_shard, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def sync_shard(grads):
+        return sync_replicated_grads(grads, specs, topo.cube)
+
+    def opt_shard(params, opt_state, grads):
+        sq = 0.0
+        flat, tdef = jax.tree.flatten(grads)
+        sflat = tdef.flatten_up_to(specs)
+        for g, s in zip(flat, sflat):
+            sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32))
+                              ) / _replication_factor(s, topo)
+        sq = pvary_axes(sq, topo.cube.dim_names)
+        gnorm = jnp.sqrt(topo.comm(topo.cube.dim_names).all_reduce(sq))
+        scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = adamw.update(params, opt_state, grads,
+                                         lr=lr, cfg=tc.adamw)
+        return params, opt_state, {"grad_norm": gnorm, "lr": lr}
+
+    fwd = jax.jit(shard_map(
+        fwd_shard, mesh=mesh, in_specs=(specs, batch_specs),
+        out_specs=(P(), aux_specs), check_vma=True))
+    fwd_bwd = jax.jit(shard_map(
+        fwd_bwd_shard, mesh=mesh, in_specs=(specs, batch_specs),
+        out_specs=(P(), aux_specs, specs), check_vma=True))
+    sync = None
+    if not compat.HAS_VMA:
+        sync = jax.jit(shard_map(
+            sync_shard, mesh=mesh, in_specs=(specs,), out_specs=specs,
+            check_vma=False))
+    opt = jax.jit(shard_map(
+        opt_shard, mesh=mesh, in_specs=(specs, opt_specs, specs),
+        out_specs=(specs, opt_specs, {"grad_norm": P(), "lr": P()}),
+        check_vma=True))
+    return fwd, fwd_bwd, sync, opt
+
+
 def init_opt_state(params, cfg, topo, tc: TrainConfig):
     """Optimizer state for :func:`make_train_step`: AdamW moments plus the
     compressed-hop error-feedback buffers when this run threads them."""
@@ -370,8 +460,63 @@ class Trainer:
     def __init__(self, cfg, topo, tc: TrainConfig, checkpointer=None):
         self.cfg, self.topo, self.tc = cfg, topo, tc
         self.step_fn = make_train_step(cfg, topo, tc)
+        self.split_fns = (make_split_train_step(cfg, topo, tc)
+                          if tc.telemetry_split else None)
         self.checkpointer = checkpointer
         self.slow_steps = 0
+        self._sync_priced = False
+
+    def _record_step_telemetry(self, dt: float, straggler: bool) -> None:
+        """Per-step metric updates (also the enabled-path payload the
+        ``telemetry_overhead`` bench row measures)."""
+        _telemetry.inc("train.steps")
+        _telemetry.observe("train.step_seconds", dt)
+        if straggler:
+            _telemetry.inc("train.straggler_steps")
+
+    def _price_sync_estimates(self, events) -> None:
+        """Set the grad-sync planner-estimate gauges from the traced
+        step's CommEvents: serial = every program-recorded sync second on
+        the critical path; exposed = only the final bucket's, the one the
+        overlap path cannot hide under backward."""
+        by_prog: dict = {}
+        for e in events:
+            if e.program_id and str(e.program_id).startswith("grad-sync"):
+                by_prog.setdefault(e.program_id, []).append(e)
+        if not by_prog:
+            return
+        serial = sum(e.seconds for evs in by_prog.values() for e in evs)
+        # overlap buckets are named grad-sync-b{k}; the highest k is the
+        # final bucket.  The barrier path's single unsuffixed program is
+        # then also the "last" -- fully exposed.
+        last = max(by_prog, key=lambda pid: int(pid.rsplit("-b", 1)[1])
+                   if "-b" in pid else -1)
+        exposed = sum(e.seconds for e in by_prog[last])
+        _telemetry.set_gauge("train.sync_serial_est_us", serial * 1e6)
+        _telemetry.set_gauge("train.sync_exposed_est_us", exposed * 1e6)
+
+    def _run_split_step(self, params, opt_state, batch):
+        """telemetry_split mode: phase-timed fwd / fwd+bwd / sync / opt."""
+        fwd, fwd_bwd, sync, opt = self.split_fns
+        t0 = time.monotonic()
+        jax.block_until_ready(fwd(params, batch))
+        t1 = time.monotonic()
+        loss, aux, grads = fwd_bwd(params, batch)
+        jax.block_until_ready(grads)
+        t2 = time.monotonic()
+        if sync is not None:
+            grads = sync(grads)
+            jax.block_until_ready(grads)
+        t3 = time.monotonic()
+        params, opt_state, om = opt(params, opt_state, grads)
+        jax.block_until_ready((params, opt_state))
+        t4 = time.monotonic()
+        _telemetry.observe("train.fwd_seconds", t1 - t0)
+        _telemetry.observe("train.fwd_bwd_seconds", t2 - t1)
+        _telemetry.observe("train.sync_seconds", t3 - t2)
+        _telemetry.observe("train.opt_seconds", t4 - t3)
+        metrics = dict(aux, loss=loss, **om)
+        return params, opt_state, metrics
 
     def run(self, params, opt_state, batches, *, start_step=0,
             checkpoint_every=0, log_every=1, log=print):
@@ -379,21 +524,43 @@ class Trainer:
         history = []
         for batch in batches:
             t0 = time.monotonic()
-            params, opt_state, metrics = self.step_fn(params, opt_state,
-                                                      batch)
-            # block on the step's real outputs before reading the clock:
-            # the param/opt_state updates are not data-dependent on the
-            # logged metrics, so coercing metrics alone lets async dispatch
-            # leak their compute out of dt -- the straggler deadline and
-            # the logged per-step ms would undercount
-            jax.block_until_ready((params, opt_state))
+            with _spans.maybe_span("train-step", cat="wall", step=step):
+                # getattr: tests drive partially-constructed Trainers
+                # (object.__new__) through run()
+                if getattr(self, "split_fns", None) is not None:
+                    params, opt_state, metrics = self._run_split_step(
+                        params, opt_state, batch)
+                elif (_telemetry.enabled()
+                      and not getattr(self, "_sync_priced", True)):
+                    # first metered step: trace the grad-sync events once
+                    # to price the serial/exposed sync-estimate gauges
+                    from repro.core.comm import CommTrace
+                    with CommTrace() as ct:
+                        params, opt_state, metrics = self.step_fn(
+                            params, opt_state, batch)
+                    self._price_sync_estimates(ct.events)
+                    self._sync_priced = True
+                else:
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch)
+                # block on the step's real outputs before reading the
+                # clock: the param/opt_state updates are not
+                # data-dependent on the logged metrics, so coercing
+                # metrics alone lets async dispatch leak their compute out
+                # of dt -- the straggler deadline and the logged per-step
+                # ms would undercount
+                jax.block_until_ready((params, opt_state))
             metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.monotonic() - t0
-            if self.tc.step_deadline_s and dt > self.tc.step_deadline_s:
+            straggler = bool(self.tc.step_deadline_s
+                             and dt > self.tc.step_deadline_s)
+            if straggler:
                 # straggler mitigation: record and continue -- on a real
                 # cluster this triggers the runtime's slow-host report
                 self.slow_steps += 1
                 metrics["straggler"] = 1.0
+            if _telemetry.enabled():
+                self._record_step_telemetry(dt, straggler)
             step += 1
             history.append(metrics)
             if log_every and step % log_every == 0:

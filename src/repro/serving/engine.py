@@ -63,6 +63,9 @@ from repro.serving import pages as pages_mod
 from repro.serving.pages import (
     PagedServer, PageTable, extract_slot_pages, init_paged_cache,
     inject_slot_pages, make_page_plan, paged_cache_specs)
+from repro.telemetry import drift as _drift
+from repro.telemetry import spans as _spans
+from repro.telemetry.metrics import MetricsRegistry
 
 Array = jax.Array
 _I32MAX = np.int32(np.iinfo(np.int32).max)
@@ -148,9 +151,14 @@ class ServeEngine:
         self.step_idx = 0
         self.programs_recorded = 0
         self.last_program = None   # most recent per-step CommProgram
-        self.step_wall: list[float] = []
-        self.token_wall: list[float] = []   # per generated token (s)
         self.finished: list[Request] = []
+
+        # Per-engine metrics registry (always on -- it replaces the old
+        # step_wall/token_wall list bookkeeping and is the single source
+        # run() and benchmarks/serving.py read latency/throughput from).
+        self.metrics = MetricsRegistry()
+        self._lower_hits = 0
+        self._lower_lookups = 0
 
         self._step_fn = self._build_step()
 
@@ -254,6 +262,7 @@ class ServeEngine:
         saved = entry if isinstance(entry, dict) else None
         req: Request = saved["req"] if saved else entry
         start = int(saved["pos"]) if saved else 0
+        self.metrics.counter("serve.admitted").inc()
         self.slot_req[slot] = req
         self.pos_h[slot] = start
         self.active_h[slot] = True
@@ -322,6 +331,7 @@ class ServeEngine:
         self._release(victim)
         self._evict_next[victim] = True     # device lane off next program
         self.queue.insert(0, saved)
+        self.metrics.counter("serve.preempted").inc()
         return True
 
     # ------------------------------------------------------------- stepping
@@ -344,6 +354,11 @@ class ServeEngine:
     def step(self) -> None:
         """One engine step: evict / admit / record-and-run the step program
         / run the jitted paged-decode + sampling cell."""
+        with _spans.maybe_span("serve-step", cat="wall",
+                               step=self.step_idx):
+            self._step_inner()
+
+    def _step_inner(self) -> None:
         t0 = time.perf_counter()
         B, pplan = self.B, self.pplan
         self._evict_next = np.zeros(B, bool)
@@ -357,6 +372,7 @@ class ServeEngine:
                 self.finished.append(req)
                 self._release(b)
                 self._evict_next[b] = True
+                self.metrics.counter("serve.evicted").inc()
 
         # -- admit from the arrival queue into free lanes
         admit = np.zeros(B, bool)
@@ -389,6 +405,11 @@ class ServeEngine:
                         f"page pools exhausted on shard {sh} and no "
                         "preemptible request holds pages there")
 
+        free = np.asarray(self.table.free_per_shard(), np.int64)
+        total_pages = self.pplan.n_shards * self.pplan.pages_per_shard
+        self.metrics.gauge("serve.page_occupancy").set(
+            1.0 - float(free.sum()) / total_pages if total_pages else 0.0)
+
         evict = self._evict_next
         key = np.array([np.uint32(self.seed), np.uint32(self.step_idx)],
                        np.uint32)
@@ -408,8 +429,24 @@ class ServeEngine:
                     kvc.broadcast(evict), kvc.broadcast(self.temp_h.copy()),
                     kvc.broadcast(key), kvc.gather(prev)]
             prog.output(*outs)
-        (table_d, admit_d, atok_d, apos_d, aprm_d, plen_d, evict_d, temp_d,
-         key_d, prev_host) = prog.execute(self._sampled)
+        from repro.core.program import LOWER_STATS
+        hits0, low0 = LOWER_STATS["cache_hits"], LOWER_STATS["lowered"]
+        te0 = time.perf_counter()
+        with _spans.maybe_span("step-program", cat="wall",
+                               step=self.step_idx,
+                               program_id=prog.program_id):
+            (table_d, admit_d, atok_d, apos_d, aprm_d, plen_d, evict_d,
+             temp_d, key_d, prev_host) = prog.execute(self._sampled)
+        exec_wall = time.perf_counter() - te0
+        self._lower_hits += LOWER_STATS["cache_hits"] - hits0
+        self._lower_lookups += (LOWER_STATS["cache_hits"] - hits0
+                                + LOWER_STATS["lowered"] - low0)
+        if self._lower_lookups:
+            self.metrics.gauge("serve.lower_cache_hit_ratio").set(
+                self._lower_hits / self._lower_lookups)
+        mon = _drift.active_monitor()
+        if mon is not None:
+            mon.observe_plan(prog._lowered_default().plan, exec_wall)
         self.programs_recorded += 1
         self.last_program = prog
         self._apply_meta(np.asarray(prev_host))
@@ -436,8 +473,14 @@ class ServeEngine:
             self.pos_h[b] = p + 1
         self.step_idx += 1
         dt = time.perf_counter() - t0
-        self.step_wall.append(dt)
-        self.token_wall.extend([dt] * gen_this_step)
+        self.metrics.counter("serve.steps").inc()
+        self.metrics.histogram("serve.step_seconds").observe(dt)
+        if gen_this_step:
+            self.metrics.counter("serve.generated_tokens").inc(
+                gen_this_step)
+            tok_hist = self.metrics.histogram("serve.token_seconds")
+            for _ in range(gen_this_step):
+                tok_hist.observe(dt)
 
     # ------------------------------------------------------------------ run
     def run(self, requests: list[Request] | None = None, *,
@@ -453,22 +496,35 @@ class ServeEngine:
             self.step()
         self._drain()
         wall = time.perf_counter() - t0
-        lat = np.sort(np.asarray(self.token_wall, np.float64))
-        n_tok = int(lat.size)
-        pct = (lambda q: float(lat[min(n_tok - 1,
-                                       int(np.ceil(q * n_tok)) - 1)])
-               if n_tok else 0.0)
+        # Single measurement path: throughput and per-token percentiles
+        # come from the engine's metrics registry (the token_seconds
+        # histogram retains raw samples, so quantile() reproduces the
+        # historical sorted-array formula exactly).
+        n_tok = int(self.metrics.value("serve.generated_tokens"))
+        tps = n_tok / wall if wall > 0 else 0.0
+        self.metrics.gauge("serve.tokens_per_s").set(tps)
         return {
             "steps": self.step_idx,
             "wall_s": wall,
             "generated_tokens": n_tok,
-            "tokens_per_s": n_tok / wall if wall > 0 else 0.0,
-            "p50_token_s": pct(0.50),
-            "p99_token_s": pct(0.99),
+            "tokens_per_s": tps,
+            "p50_token_s": self.metrics.quantile("serve.token_seconds",
+                                                 0.50),
+            "p99_token_s": self.metrics.quantile("serve.token_seconds",
+                                                 0.99),
             "programs_recorded": self.programs_recorded,
             "preemptions": sum(r.preemptions for r in self.finished),
             "finished": list(self.finished),
         }
+
+    def reset_metrics(self) -> None:
+        """Zero the registry and run-scoped bookkeeping (warmup boundary
+        for benchmarks); in-flight request state is untouched."""
+        self.metrics.reset()
+        self._lower_hits = 0
+        self._lower_lookups = 0
+        self.programs_recorded = 0
+        self.finished.clear()
 
 
 def poisson_trace(n_requests: int, *, rate: float, plen_range=(4, 16),

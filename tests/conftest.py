@@ -19,6 +19,23 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True)
+def _reset_observability_state():
+    """Isolate per-test observability state so test order can never change
+    observed counts: zero ``program.LOWER_STATS``, empty every cube's
+    cross-program lower cache (the session-scoped cube fixtures otherwise
+    carry cached schedules -- and their hit counts -- between tests), and
+    leave the process-wide telemetry registry disabled and empty."""
+    yield
+    from repro.core import program
+    from repro.telemetry import metrics as telemetry_metrics
+    program.clear_lower_cache()
+    for k in program.LOWER_STATS:
+        program.LOWER_STATS[k] = 0
+    telemetry_metrics.disable()
+    telemetry_metrics.REGISTRY.reset()
+
+
 def _cube(name):
     from repro.testing import substrate
     substrate.ensure_virtual_devices(8)
