@@ -193,7 +193,87 @@ def train_step_bench():
                                         variants["barrier"], batch,
                                         disabled_us=rows["barrier"]
                                         ["measured_us"])
-    return [rows["barrier"], rows["overlap"], overhead]
+    ckpt = ckpt_overlap_bench(cfg, topo, variants["barrier"])
+    return [rows["barrier"], rows["overlap"], overhead, ckpt]
+
+
+def ckpt_overlap_bench(cfg, topo, tc):
+    """``ckpt_overlap`` row: what an async checkpoint save costs the
+    training loop per dispatch.
+
+    ``measured_us`` is the median wall time of an async
+    ``CheckpointManager.save()`` call -- the rooted-gather programs
+    (device->host, must run at dispatch because the train step donates the
+    buffers) plus the executor handoff; serialization and disk writes are
+    off the timed path.  ``plan_est_us``/``serial_est_us`` price the
+    recorded gather programs through :func:`planner.plan_program`
+    (overlap-priced vs summed per-op estimates).  The derived cell carries
+    the synchronous save wall time: ``sync_save_us - measured_us`` is the
+    write time the async design hides under training.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    from repro.checkpoint.manager import CheckpointManager, TrainState
+    from repro.core import planner
+    from repro.core.comm import CommTrace
+    from repro.models.params import param_specs
+    from repro.runtime.trainer import opt_specs
+
+    params, opt_state = _fresh_state(cfg, topo, tc)
+    state = TrainState(params=params, opt=opt_state)
+    specs = {"params": param_specs(cfg, topo),
+             "opt": opt_specs(cfg, topo, tc)}
+    root = tempfile.mkdtemp(prefix="bench-ckpt-")
+    try:
+        mgr = CheckpointManager(root, topo=topo, specs=specs, keep_last=1)
+        with CommTrace() as tr:   # first save records + lowers the gathers
+            mgr.save(0, state)
+        mgr.wait()
+
+        by_prog: dict[str, list] = {}
+        for e in tr.events:
+            if e.program_id and e.program_id.startswith("ckpt-gather"):
+                by_prog.setdefault(e.program_id, []).append(e)
+        serial_s = sum(e.seconds for evs in by_prog.values() for e in evs)
+        plans = {pid: planner.plan_program(topo.cube, [
+            planner.ProgramOpSpec(op_id=i, primitive=e.primitive,
+                                  dims=e.dims, payload_bytes=e.payload_bytes)
+            for i, e in enumerate(evs)]) for pid, evs in by_prog.items()}
+        plan_s = sum(p.seconds for p in plans.values())
+        sources = {p.est_source for p in plans.values()}
+        source = sources.pop() if len(sources) == 1 else "mixed"
+        n_ops = sum(len(evs) for evs in by_prog.values())
+
+        def timed_saves(manager, reps):
+            times, step = [], manager.latest_step() or 0
+            for _ in range(reps):
+                step += 1
+                manager.wait()    # drain OUTSIDE the timed window
+                t0 = _time.perf_counter()
+                manager.save(step, state)
+                times.append(_time.perf_counter() - t0)
+            manager.wait()
+            times.sort()
+            return times[len(times) // 2] * 1e6
+
+        timed_saves(mgr, 2)                      # warmup (cache-hit path)
+        async_us = timed_saves(mgr, 5)
+        sync_mgr = CheckpointManager(root, topo=topo, specs=specs,
+                                     keep_last=1, async_save=False)
+        sync_us = timed_saves(sync_mgr, 5)
+        emit(f"train_step/{ARCH}/ckpt_overlap", async_us,
+             f"sync_save_us={sync_us:.1f}"
+             f";hidden_write_us={sync_us - async_us:.1f}"
+             f";gather_ops={n_ops};est_source={source}")
+        return {"name": "ckpt_overlap", "ops": n_ops,
+                "measured_us": round(async_us, 2),
+                "plan_est_us": round(plan_s * 1e6, 3),
+                "serial_est_us": round(serial_s * 1e6, 3),
+                "est_source": source}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
 
 
 def telemetry_overhead_bench(cfg, topo, step_fn, tc, batch, *,

@@ -428,6 +428,52 @@ print(f"drift monitor flagged ({sw.flow}, {sw.stage}, {sw.domain}): "
       f"median meas_over_est={sw.median:.3g} outside "
       f"[{sw.band[0]:g}, {sw.band[1]:g}] -- {sw.recipe}")
 
+# 13. elastic checkpointing (repro.checkpoint): save from the 2x2x2 cube
+#     -- one recorded rooted-gather program per section; the second save's
+#     structural fingerprint matches the first, so it hits the lower cache
+#     -- then restore the same checkpoint onto a 1-D ring of the same 8
+#     devices through a rooted-scatter program planned for THAT cube.
+#     Same global bits, different placement: the forward pass on the ring
+#     is bit-identical.  Every checkpoint collective carries program_id
+#     provenance into the trace.
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+
+from repro.checkpoint import CheckpointManager, TrainState
+from repro.core import program as program_mod  # noqa: E402
+
+wspec = {"w": P("x", ("y", "z")), "b": P(("x", "y"), None)}
+host_w = {"w": jnp.arange(64.0, dtype=jnp.float32).reshape(8, 8),
+          "b": jnp.arange(32.0, dtype=jnp.float32).reshape(8, 4)}
+placed_w = {k: jax.device_put(v, cube.sharding(wspec[k]))
+            for k, v in host_w.items()}
+ckpt_dir = tempfile.mkdtemp(prefix="quickstart-ckpt-")
+saver = CheckpointManager(ckpt_dir, topo=cube, async_save=False,
+                          specs={"params": wspec, "opt": None})
+hits_before = program_mod.LOWER_STATS["cache_hits"]
+saver.save(1, TrainState(params=placed_w))
+saver.save(2, TrainState(params=placed_w))
+ckpt_cache_hits = program_mod.LOWER_STATS["cache_hits"] - hits_before
+assert ckpt_cache_hits >= 1, "second save must reuse the gather lowering"
+
+ring = Hypercube.build(mesh, {"r": 8})          # elastic: different cube
+rspec = {"w": P("r", None), "b": P("r", None)}
+loader = CheckpointManager(ckpt_dir, topo=ring,
+                           specs={"params": rspec, "opt": None})
+with CommTrace() as ckpt_trace:
+    restored = loader.restore_params(2)
+ckpt_summary = ckpt_trace.summary()
+assert "ckpt-restore-params" in ckpt_summary["programs"]
+assert restored["w"].sharding.spec == P("r", None)
+
+fwd13 = jax.jit(lambda t: t["w"] @ t["b"])
+np.testing.assert_array_equal(np.asarray(fwd13(restored)),
+                              np.asarray(fwd13(host_w)))
+shutil.rmtree(ckpt_dir)
+print("elastic restore: saved on {x,y,z}=2x2x2, restored onto {r}=8 via "
+      f"a planned scatter program ({ckpt_cache_hits} save lower-cache "
+      "hits); ring forward bit-identical to the host reference")
+
 import os  # noqa: E402
 if os.environ.get("QUICKSTART_SUMMARY"):
     out_dir = os.path.dirname(os.environ["QUICKSTART_SUMMARY"]) or "."
@@ -458,6 +504,10 @@ if os.environ.get("QUICKSTART_SUMMARY"):
                        "tokens_per_s": serve_metrics["tokens_per_s"],
                        "programs_recorded":
                            serve_metrics["programs_recorded"]},
+                   "checkpoint": {
+                       "summary": ckpt_summary,
+                       "save_lower_cache_hits": ckpt_cache_hits,
+                       "restore_programs": ckpt_summary["programs"]},
                    "telemetry": {
                        "serve_step_spans": len(serve_spans),
                        "comm_child_spans": len(prog_children),

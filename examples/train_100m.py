@@ -51,7 +51,8 @@ def main():
     stream = TokenStream(cfg, DataConfig(
         seq_len=args.seq, global_batch=args.batch,
         vocab_size=cfg.vocab_size))
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    ckpt = CheckpointManager(args.ckpt_dir, topo=topo) \
+        if args.ckpt_dir else None
     trainer = Trainer(cfg, topo, tc, checkpointer=ckpt)
 
     def batches():
@@ -63,6 +64,8 @@ def main():
         params, opt, batches(),
         checkpoint_every=args.steps // 2 if ckpt else 0,
         log_every=max(args.steps // 25, 1))
+    if ckpt:
+        ckpt.wait()
     print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over "
           f"{args.steps} steps")
 

@@ -1,0 +1,16 @@
+"""Elastic checkpointing as collective programs.
+
+* :mod:`repro.checkpoint.manager` — the topology-bound
+  :class:`CheckpointManager` surface (async save, elastic restore,
+  deprecated positional shims) and the :class:`TrainState` container;
+* :mod:`repro.checkpoint.layout` — on-disk step layout, manifest v2
+  (leaf records + structural fingerprint), atomic finalize;
+* :mod:`repro.checkpoint.reshard` — save/restore data movement as
+  recorded rooted gather/scatter CommPrograms, planned under the
+  installed CommProfile;
+* :mod:`repro.checkpoint.hf_import` — Hugging Face safetensors /
+  ``pytorch_model.bin`` import onto the ``configs/`` param trees.
+"""
+from repro.checkpoint.manager import CheckpointManager, TrainState
+
+__all__ = ["CheckpointManager", "TrainState"]

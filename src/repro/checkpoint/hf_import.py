@@ -1,0 +1,566 @@
+"""Hugging Face checkpoint import onto the ``configs/`` param trees.
+
+Dependency-free readers/writers for the two HF weight formats —
+**safetensors** (8-byte LE header length + JSON header + raw buffer) and
+**pytorch_model.bin** (a zip archive whose ``data.pkl`` references per-
+tensor storage files through pickle persistent ids) — plus the key-layout
+mapping from transformer ``state_dict`` names onto this repo's stacked
+unit trees (:func:`repro.models.params.param_defs`).  No ``torch`` and no
+``safetensors`` package involved: both are parsed with numpy + stdlib.
+
+Mapping conventions (see ``docs/CHECKPOINT.md`` for the matrix):
+
+* torch ``Linear`` stores ``(out, in)`` and applies ``x @ W.T``; this repo
+  stores the applied orientation, so every projection imports transposed.
+* RMSNorm scales here are residual (``rms_norm`` applies ``1 + w``), so HF
+  norm weights import as ``w - 1``.
+* ``wkv`` interleaves k/v per head — column layout ``(KV, 2, hd)`` — so
+  k_proj/v_proj stack head-wise, not concatenate.
+* The vocab axis pads to ``vocab_padded(cfg, topo)`` with zero rows; the
+  router pads expert columns to ``n_experts_padded`` with a large negative
+  constant so softmax routes nothing to padding experts.
+* Layer ``l`` lands at stack index ``l // unit``, position ``p{l % unit}``
+  (the scan-over-units order of ``models.lm``).
+
+Supported mixers/FFNs: attention + dense (LLaMA-style split projections
+and the phi3 fused ``qkv_proj``/``gate_up_proj`` forms) and MoE
+(mixtral ``block_sparse_moe`` and qwen2-moe ``mlp.experts`` layouts,
+shared experts included).  Mamba/RWKV mixers and encoder-decoder trees
+have no HF mapping here yet and raise :class:`UnsupportedArchitecture`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import struct
+import zipfile
+from typing import Any
+
+import numpy as np
+
+from repro.models.config import ATTN, DENSE, MOE, ModelConfig
+
+ROUTER_PAD = -1e9  # routed probability of a padding expert underflows to 0
+
+
+class UnsupportedArchitecture(NotImplementedError):
+    """The config's param tree has no HF key mapping (yet)."""
+
+
+# ====================================================== safetensors format
+_ST_DTYPES = {
+    "F64": np.float64, "F32": np.float32, "F16": np.float16,
+    "I64": np.int64, "I32": np.int32, "I16": np.int16, "I8": np.int8,
+    "U8": np.uint8, "BOOL": np.bool_,
+}
+
+
+def _bfloat16():
+    import ml_dtypes  # ships with jax
+    return ml_dtypes.bfloat16
+
+
+def _st_dtype(name: str):
+    if name == "BF16":
+        return _bfloat16()
+    try:
+        return _ST_DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unsupported safetensors dtype {name!r}") from None
+
+
+def _st_dtype_name(dtype) -> str:
+    dtype = np.dtype(dtype)
+    if dtype.name == "bfloat16":
+        return "BF16"
+    for name, np_t in _ST_DTYPES.items():
+        if np.dtype(np_t) == dtype:
+            return name
+    raise ValueError(f"unsupported dtype {dtype} for safetensors")
+
+
+def read_safetensors(path: str) -> dict[str, np.ndarray]:
+    """Parse a ``.safetensors`` file into ``{name: array}``."""
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        buf = f.read()
+    out = {}
+    for name, meta in header.items():
+        if name == "__metadata__":
+            continue
+        lo, hi = meta["data_offsets"]
+        arr = np.frombuffer(buf[lo:hi], dtype=_st_dtype(meta["dtype"]))
+        out[name] = arr.reshape(meta["shape"])
+    return out
+
+
+def write_safetensors(path: str, tensors: dict[str, np.ndarray], *,
+                      metadata: dict[str, str] | None = None) -> None:
+    """Write ``{name: array}`` as a ``.safetensors`` file."""
+    header: dict[str, Any] = {}
+    if metadata:
+        header["__metadata__"] = dict(metadata)
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        a = np.ascontiguousarray(tensors[name])
+        raw = a.tobytes()
+        header[name] = {
+            "dtype": _st_dtype_name(a.dtype),
+            "shape": [int(s) for s in a.shape],
+            "data_offsets": [offset, offset + len(raw)],
+        }
+        blobs.append(raw)
+        offset += len(raw)
+    hjson = json.dumps(header).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for raw in blobs:
+            f.write(raw)
+
+
+# ================================================= pytorch_model.bin format
+_TORCH_DTYPES = {
+    "FloatStorage": np.float32, "DoubleStorage": np.float64,
+    "HalfStorage": np.float16, "LongStorage": np.int64,
+    "IntStorage": np.int32, "ShortStorage": np.int16,
+    "CharStorage": np.int8, "ByteStorage": np.uint8,
+    "BoolStorage": np.bool_,
+}
+
+
+class _StorageStub:
+    """Stands in for a ``torch.<T>Storage`` class object in the pickle."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+
+class _TensorStub:
+    """Result of ``_rebuild_tensor_v2``: enough to realize a numpy view."""
+
+    def __init__(self, storage_key, dtype, offset, size, stride):
+        self.storage_key = storage_key
+        self.dtype = dtype
+        self.offset = int(offset)
+        self.size = tuple(int(s) for s in size)
+        self.stride = tuple(int(s) for s in stride)
+
+
+def _rebuild_stub(storage, offset, size, stride, *args):
+    key, dtype = storage
+    return _TensorStub(key, dtype, offset, size, stride)
+
+
+class _TorchUnpickler(pickle.Unpickler):
+    """Unpickles a torch ``data.pkl`` without torch: any ``torch.*`` global
+    resolves to a stub, and persistent ids resolve to (storage key, dtype)
+    pairs realized lazily from the archive's ``data/<key>`` entries."""
+
+    def find_class(self, module: str, name: str):
+        if module.startswith("torch"):
+            if name.endswith("Storage"):
+                return _StorageStub(name)
+            if name in ("_rebuild_tensor_v2", "_rebuild_tensor"):
+                return _rebuild_stub
+            if name == "OrderedDict":
+                return dict
+            return _StorageStub(f"{module}.{name}")
+        if module == "collections" and name == "OrderedDict":
+            return dict
+        raise pickle.UnpicklingError(
+            f"pytorch_model.bin pickles non-torch global {module}.{name}")
+
+    def persistent_load(self, pid):
+        kind, storage_type, key, _location, _numel = pid
+        if kind != "storage":
+            raise pickle.UnpicklingError(f"unknown persistent id {kind!r}")
+        name = storage_type.name if isinstance(storage_type, _StorageStub) \
+            else str(storage_type)
+        return (key, np.dtype(_TORCH_DTYPES[name]))
+
+
+def read_pytorch_bin(path: str) -> dict[str, np.ndarray]:
+    """Parse a ``pytorch_model.bin`` (zip serialization) into
+    ``{name: array}`` without torch."""
+    out = {}
+    with zipfile.ZipFile(path) as zf:
+        names = zf.namelist()
+        pkl_name = next(n for n in names if n.endswith("/data.pkl"))
+        prefix = pkl_name[: -len("data.pkl")]
+        with zf.open(pkl_name) as f:
+            state = _TorchUnpickler(f).load()
+        for name, t in state.items():
+            if not isinstance(t, _TensorStub):
+                continue
+            raw = zf.read(f"{prefix}data/{t.storage_key}")
+            flat = np.frombuffer(raw, dtype=t.dtype)
+            if t.size == ():
+                out[name] = flat[t.offset].copy().reshape(())
+                continue
+            out[name] = np.lib.stride_tricks.as_strided(
+                flat[t.offset:],
+                shape=t.size,
+                strides=tuple(s * t.dtype.itemsize for s in t.stride),
+            ).copy()
+    return out
+
+
+def _install_fake_torch() -> list[str]:
+    """Pickling by reference re-imports each global to verify identity, so
+    the writer needs ``torch._utils._rebuild_tensor_v2`` and the storage
+    classes importable.  When torch is absent, install minimal fake modules
+    into ``sys.modules`` for the duration of the dump; returns the names to
+    remove afterwards (empty when real torch is importable)."""
+    import sys
+    import types
+    if "torch" in sys.modules:
+        return []
+    torch_mod = types.ModuleType("torch")
+    utils_mod = types.ModuleType("torch._utils")
+
+    def _rebuild_tensor_v2(*a, **k):  # pragma: no cover - only pickled
+        raise RuntimeError("fake torch._utils._rebuild_tensor_v2 invoked")
+
+    _rebuild_tensor_v2.__module__ = "torch._utils"
+    _rebuild_tensor_v2.__qualname__ = "_rebuild_tensor_v2"
+    utils_mod._rebuild_tensor_v2 = _rebuild_tensor_v2
+    for name in _TORCH_DTYPES:
+        setattr(torch_mod, name, type(name, (), {"__module__": "torch"}))
+    torch_mod._utils = utils_mod
+    sys.modules["torch"] = torch_mod
+    sys.modules["torch._utils"] = utils_mod
+    return ["torch", "torch._utils"]
+
+
+class _WriteTensor:
+    """Pickles exactly like a torch tensor (rebuild call + storage pid)."""
+
+    def __init__(self, key: str, array: np.ndarray):
+        self.key = key
+        self.array = array
+
+    def __reduce__(self):
+        import sys
+        a = self.array
+        stride = tuple(s // a.itemsize for s in
+                       np.ascontiguousarray(a).strides)
+        rebuild = sys.modules["torch._utils"]._rebuild_tensor_v2
+        return (rebuild,
+                (_WriteStorage(self.key, a), 0, a.shape, stride, False, {}))
+
+
+class _WriteStorage:
+    def __init__(self, key: str, array: np.ndarray):
+        self.key = key
+        self.array = array
+
+
+_NP_TO_STORAGE = {np.dtype(v): k for k, v in _TORCH_DTYPES.items()}
+
+
+class _TorchPickler(pickle.Pickler):
+    def persistent_id(self, obj):
+        if isinstance(obj, _WriteStorage):
+            import sys
+            cls = getattr(sys.modules["torch"],
+                          _NP_TO_STORAGE[np.dtype(obj.array.dtype)])
+            return ("storage", cls, obj.key, "cpu", int(obj.array.size))
+        return None
+
+
+def write_pytorch_bin(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write ``{name: array}`` in torch's zip serialization format,
+    readable by :func:`read_pytorch_bin` and by real torch."""
+    import io
+    import sys
+    state = {}
+    arrays = {}
+    for i, name in enumerate(sorted(tensors)):
+        a = np.ascontiguousarray(tensors[name])
+        if np.dtype(a.dtype) not in _NP_TO_STORAGE:
+            raise ValueError(f"unsupported dtype {a.dtype} for {name}")
+        key = str(i)
+        state[name] = _WriteTensor(key, a)
+        arrays[key] = a
+    fakes = _install_fake_torch()
+    try:
+        buf = io.BytesIO()
+        _TorchPickler(buf, protocol=2).dump(state)
+    finally:
+        for mod in fakes:
+            sys.modules.pop(mod, None)
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
+        zf.writestr("archive/data.pkl", buf.getvalue())
+        for key, a in arrays.items():
+            zf.writestr(f"archive/data/{key}", a.tobytes())
+
+
+def read_state_dict(path: str) -> dict[str, np.ndarray]:
+    """Read either HF weight format, sniffed by extension then content."""
+    if path.endswith(".safetensors"):
+        return read_safetensors(path)
+    if zipfile.is_zipfile(path):
+        return read_pytorch_bin(path)
+    return read_safetensors(path)
+
+
+# ========================================================= key-layout maps
+def _t(w: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(np.asarray(w).T)
+
+
+def _norm(w: np.ndarray) -> np.ndarray:
+    return np.asarray(w, dtype=np.float32) - 1.0
+
+
+class _LayerView:
+    """Pops a layer's keys out of the flat state dict, several aliases per
+    logical tensor (llama/mixtral/qwen2-moe/phi3 spellings)."""
+
+    def __init__(self, sd: dict, prefix: str):
+        self.sd = sd
+        self.prefix = prefix
+
+    def take(self, *names: str, required: bool = True):
+        for n in names:
+            full = self.prefix + n
+            if full in self.sd:
+                return self.sd.pop(full)
+        if required:
+            raise KeyError(
+                f"none of {[self.prefix + n for n in names]} present "
+                "in the checkpoint")
+        return None
+
+
+def _attn_from_hf(lw: _LayerView, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fused = lw.take("self_attn.qkv_proj.weight", required=False)
+    if fused is not None:  # phi3: rows are [q; k; v]
+        q = fused[: H * hd]
+        k = fused[H * hd: H * hd + KV * hd]
+        v = fused[H * hd + KV * hd:]
+    else:
+        q = lw.take("self_attn.q_proj.weight", "attention.wq.weight")
+        k = lw.take("self_attn.k_proj.weight", "attention.wk.weight")
+        v = lw.take("self_attn.v_proj.weight", "attention.wv.weight")
+    kT = _t(k).reshape(D, KV, hd)
+    vT = _t(v).reshape(D, KV, hd)
+    out = {
+        "ln": _norm(lw.take("input_layernorm.weight",
+                            "attention_norm.weight")),
+        "wq": _t(q),
+        "wkv": np.ascontiguousarray(
+            np.stack([kT, vT], axis=2).reshape(D, 2 * KV * hd)),
+        "wo": _t(lw.take("self_attn.o_proj.weight",
+                         "attention.wo.weight")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = _norm(lw.take("self_attn.q_norm.weight"))
+        out["k_norm"] = _norm(lw.take("self_attn.k_norm.weight"))
+    return out
+
+
+def _dense_from_hf(lw: _LayerView, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    fln = _norm(lw.take("post_attention_layernorm.weight",
+                        "ffn_norm.weight"))
+    fused = lw.take("mlp.gate_up_proj.weight", required=False)
+    if fused is not None:  # phi3: rows are [gate; up]
+        g, u = fused[: cfg.d_ff], fused[cfg.d_ff:]
+    else:
+        g = lw.take("mlp.gate_proj.weight", "feed_forward.w1.weight")
+        u = lw.take("mlp.up_proj.weight", "feed_forward.w3.weight")
+    d = lw.take("mlp.down_proj.weight", "feed_forward.w2.weight")
+    return {"fln": fln, "wg": _t(g), "wu": _t(u), "wd": _t(d)}
+
+
+def _moe_from_hf(lw: _LayerView, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    D, Fe, E, Ep = (cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+                    cfg.n_experts_padded)
+    router = _t(lw.take("block_sparse_moe.gate.weight", "mlp.gate.weight"))
+    if Ep > E:
+        pad = np.full((D, Ep - E), ROUTER_PAD, dtype=router.dtype)
+        router = np.concatenate([router, pad], axis=1)
+    gates, ups, downs = [], [], []
+    for e in range(E):
+        gates.append(_t(lw.take(
+            f"block_sparse_moe.experts.{e}.w1.weight",
+            f"mlp.experts.{e}.gate_proj.weight")))
+        ups.append(_t(lw.take(
+            f"block_sparse_moe.experts.{e}.w3.weight",
+            f"mlp.experts.{e}.up_proj.weight")))
+        downs.append(_t(lw.take(
+            f"block_sparse_moe.experts.{e}.w2.weight",
+            f"mlp.experts.{e}.down_proj.weight")))
+    for _ in range(Ep - E):
+        gates.append(np.zeros((D, Fe), np.float32))
+        ups.append(np.zeros((D, Fe), np.float32))
+        downs.append(np.zeros((Fe, D), np.float32))
+    out = {
+        "fln": _norm(lw.take("post_attention_layernorm.weight",
+                             "ffn_norm.weight")),
+        "router": router,
+        "we_g": np.stack(gates), "we_u": np.stack(ups),
+        "we_d": np.stack(downs),
+    }
+    if cfg.n_shared_experts:
+        out["ws_g"] = _t(lw.take("mlp.shared_expert.gate_proj.weight"))
+        out["ws_u"] = _t(lw.take("mlp.shared_expert.up_proj.weight"))
+        out["ws_d"] = _t(lw.take("mlp.shared_expert.down_proj.weight"))
+        lw.take("mlp.shared_expert_gate.weight", required=False)
+    return out
+
+
+def _pad_rows(a: np.ndarray, n: int) -> np.ndarray:
+    if a.shape[0] == n:
+        return a
+    pad = np.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def import_state_dict(sd: dict[str, np.ndarray], cfg: ModelConfig,
+                      topo=None, *, dtype=np.float32,
+                      strict: bool = True) -> dict:
+    """Map an HF ``state_dict`` onto this repo's param tree (numpy leaves,
+    global shapes for ``topo`` — pass the topology the params will live on
+    so the vocab axis pads to its ``tp_size``; ``None`` means no padding).
+
+    ``strict`` raises if checkpoint keys remain unconsumed after mapping
+    (catching silent architecture drift); rotary ``inv_freq`` buffers are
+    always ignored.
+    """
+    mixers, ffns = cfg.mixers(), cfg.ffns()
+    if cfg.is_encoder_decoder or any(m != ATTN for m in mixers) \
+            or any(f not in (DENSE, MOE) for f in ffns):
+        raise UnsupportedArchitecture(
+            f"{cfg.name}: HF import supports attention mixers with "
+            "dense/MoE FFNs; mamba/rwkv/encoder-decoder trees have no "
+            "key mapping yet")
+
+    tp_size = getattr(topo, "tp_size", 1) if topo is not None else 1
+    import math as _math
+    Vp = int(_math.ceil(cfg.vocab_size / tp_size) * tp_size)
+
+    sd = dict(sd)
+    for k in [k for k in sd if k.endswith("rotary_emb.inv_freq")]:
+        del sd[k]
+
+    unit = cfg.unit()
+    n_units = cfg.n_layers // unit
+    per_pos: dict[str, list[dict]] = {f"p{p}": [None] * n_units
+                                      for p in range(unit)}
+    for layer in range(cfg.n_layers):
+        lw = _LayerView(sd, f"model.layers.{layer}.")
+        leaves = dict(_attn_from_hf(lw, cfg))
+        kind = ffns[layer]
+        leaves.update(_moe_from_hf(lw, cfg) if kind == MOE
+                      else _dense_from_hf(lw, cfg))
+        per_pos[f"p{layer % unit}"][layer // unit] = leaves
+
+    units = {}
+    for pos, layers in per_pos.items():
+        names = layers[0].keys()
+        units[pos] = {
+            name: np.stack([np.asarray(l[name], dtype=dtype)
+                            for l in layers])
+            for name in names}
+
+    root = _LayerView(sd, "")
+    embed = np.asarray(root.take("model.embed_tokens.weight",
+                                 "tok_embeddings.weight"))
+    tree: dict[str, Any] = {
+        "embed": _pad_rows(embed, Vp).astype(dtype),
+        "units": units,
+        "final_norm": _norm(root.take("model.norm.weight",
+                                      "norm.weight")).astype(dtype),
+    }
+    if not cfg.tie_embeddings:
+        head = root.take("lm_head.weight", "output.weight", required=False)
+        if head is None:  # tied on the HF side: reuse the embedding
+            head = embed
+        tree["lm_head"] = np.ascontiguousarray(
+            _pad_rows(np.asarray(head), Vp).T).astype(dtype)
+    else:
+        root.take("lm_head.weight", required=False)
+
+    if strict and sd:
+        extra = sorted(sd)[:8]
+        raise ValueError(
+            f"{len(sd)} checkpoint keys have no mapping onto {cfg.name} "
+            f"(first few: {extra}); pass strict=False to ignore")
+    return tree
+
+
+def export_state_dict(params, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    """The inverse map: this repo's param tree -> HF-style ``state_dict``
+    (split llama-style projections, un-padded vocab).  The roundtrip
+    ``import_state_dict(export_state_dict(p)) == p`` is exact for
+    attention+dense architectures whose vocab needs no padding."""
+    mixers, ffns = cfg.mixers(), cfg.ffns()
+    if cfg.is_encoder_decoder or any(m != ATTN for m in mixers) \
+            or any(f != DENSE for f in ffns):
+        raise UnsupportedArchitecture(
+            f"{cfg.name}: HF export supports attention+dense trees")
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    V = cfg.vocab_size
+    unit = cfg.unit()
+    sd: dict[str, np.ndarray] = {}
+    sd["model.embed_tokens.weight"] = \
+        np.asarray(params["embed"])[:V].copy()
+    sd["model.norm.weight"] = np.asarray(params["final_norm"]) + 1.0
+    if not cfg.tie_embeddings:
+        sd["lm_head.weight"] = _t(np.asarray(params["lm_head"])[:, :V])
+    for layer in range(cfg.n_layers):
+        w = params["units"][f"p{layer % unit}"]
+        u = layer // unit
+        pre = f"model.layers.{layer}."
+        sd[pre + "input_layernorm.weight"] = np.asarray(w["ln"][u]) + 1.0
+        sd[pre + "self_attn.q_proj.weight"] = _t(w["wq"][u])
+        kv = np.asarray(w["wkv"][u]).reshape(D, KV, 2, hd)
+        sd[pre + "self_attn.k_proj.weight"] = _t(
+            kv[:, :, 0].reshape(D, KV * hd))
+        sd[pre + "self_attn.v_proj.weight"] = _t(
+            kv[:, :, 1].reshape(D, KV * hd))
+        sd[pre + "self_attn.o_proj.weight"] = _t(w["wo"][u])
+        if cfg.qk_norm:
+            sd[pre + "self_attn.q_norm.weight"] = \
+                np.asarray(w["q_norm"][u]) + 1.0
+            sd[pre + "self_attn.k_norm.weight"] = \
+                np.asarray(w["k_norm"][u]) + 1.0
+        sd[pre + "post_attention_layernorm.weight"] = \
+            np.asarray(w["fln"][u]) + 1.0
+        sd[pre + "mlp.gate_proj.weight"] = _t(w["wg"][u])
+        sd[pre + "mlp.up_proj.weight"] = _t(w["wu"][u])
+        sd[pre + "mlp.down_proj.weight"] = _t(w["wd"][u])
+    return sd
+
+
+def import_checkpoint(path: str, cfg: ModelConfig, topo=None, *,
+                      dtype=np.float32, strict: bool = True,
+                      specs=None) -> dict:
+    """Read an HF weight file and map it onto the param tree.  With
+    ``topo`` *and* ``specs`` (the target ``param_specs``), leaves are
+    placed onto the cube through one rooted-scatter CommProgram — the same
+    planned path elastic restore takes; otherwise numpy leaves return."""
+    tree = import_state_dict(read_state_dict(path), cfg, topo,
+                             dtype=dtype, strict=strict)
+    if topo is not None and specs is not None:
+        import jax
+        from repro.checkpoint import reshard
+        leaves, treedef = jax.tree.flatten(tree)
+        spec_leaves = reshard.flatten_specs(specs, leaves)
+        placed = reshard.scatter_to_cube(topo, leaves, spec_leaves,
+                                         name="hf-import")
+        return jax.tree.unflatten(treedef, placed)
+    return tree
+
+
+__all__ = [
+    "UnsupportedArchitecture", "export_state_dict", "import_checkpoint",
+    "import_state_dict", "read_pytorch_bin", "read_safetensors",
+    "read_state_dict", "write_pytorch_bin", "write_safetensors",
+]

@@ -1,0 +1,187 @@
+"""On-disk checkpoint layout: step directories, manifest v2, fingerprints.
+
+One directory per step, written to a ``.tmp`` sibling and renamed into
+place, so a partially written checkpoint is never visible:
+
+    <root>/step_00000100.tmp/   -> renamed atomically to step_00000100/
+        manifest.json           # schema below
+        arr_<i>.npy             # one file per leaf, flat-order index
+
+The flat order is the sorted-key flatten of ``{"opt": ..., "params": ...}``:
+opt leaves occupy a contiguous prefix and params leaves a contiguous
+suffix, so a params-only consumer (restore-for-serving) addresses its
+section without an optimizer-state skeleton.
+
+Manifest v2 additionally records one entry per leaf — tree path, shape,
+dtype — plus a structural fingerprint over those entries, replacing the
+dead ``treedef`` field of v1.  Restore validates the target structure
+against the records and raises an actionable architecture-mismatch error
+instead of mis-loading; v1 manifests (no ``leaves`` key) skip validation.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Any, Sequence
+
+import jax
+
+MANIFEST = "manifest.json"
+FORMAT = 2
+
+# step directories are exactly step_<8 digits>; anything else in the root
+# (foreign files, leftover .tmp dirs from a killed writer) is ignored
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def list_steps(root: str) -> list[int]:
+    """Steps with a completed (renamed) directory under ``root``, sorted.
+
+    Tolerates foreign entries: only ``step_<8 digits>`` *directories*
+    count, so stray files, ``.tmp`` debris from a killed writer, and
+    unrelated subdirectories never break enumeration.
+    """
+    try:
+        entries = os.listdir(root)
+    except FileNotFoundError:
+        return []
+    out = []
+    for d in entries:
+        m = _STEP_RE.match(d)
+        if m and os.path.isdir(os.path.join(root, d)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+# ------------------------------------------------------------- leaf records
+def _path_keys(path) -> list:
+    """A jax key-path as plain JSON-able keys (dict key / index / attr)."""
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(k.key)
+        elif hasattr(k, "idx"):
+            keys.append(k.idx)
+        elif hasattr(k, "name"):
+            keys.append(k.name)
+        else:  # pragma: no cover - future key kinds degrade to str
+            keys.append(str(k))
+    return keys
+
+
+def leaf_records(tree) -> list[dict]:
+    """One record per leaf in flat order: ``{"path", "shape", "dtype"}``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    records = []
+    for path, leaf in flat:
+        records.append({
+            "path": _path_keys(path),
+            "shape": [int(s) for s in getattr(leaf, "shape", ())],
+            "dtype": str(jax.numpy.asarray(leaf).dtype)
+            if not hasattr(leaf, "dtype") else str(leaf.dtype),
+        })
+    return records
+
+
+def fingerprint(records: Sequence[dict]) -> str:
+    """Structural sha1 over leaf paths + shapes + dtypes (not values)."""
+    blob = json.dumps(list(records), sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+def tree_from_records(records: Sequence[dict], values: Sequence[Any]):
+    """Rebuild a nested-dict tree from manifest records and flat values.
+
+    Checkpointed state trees are dicts all the way down (params trees,
+    AdamW moment dicts), so path-keyed reconstruction recovers the exact
+    structure; list-typed containers would come back as int-keyed dicts
+    and need a ``specs``/``like`` skeleton instead.
+    """
+    if len(records) != len(values):
+        raise ValueError(
+            f"{len(records)} manifest records vs {len(values)} values")
+    root: dict = {}
+    for rec, val in zip(records, values):
+        node = root
+        path = rec["path"]
+        if not path:
+            return val  # single-leaf tree
+        for key in path[:-1]:
+            node = node.setdefault(key, {})
+        node[path[-1]] = val
+    return root
+
+
+def validate_records(saved: Sequence[dict], target: Sequence[dict], *,
+                     section: str, step: int) -> None:
+    """Raise an actionable architecture-mismatch error when the saved
+    section's structure does not match the restore target's."""
+    if len(saved) != len(target):
+        raise ValueError(
+            f"checkpoint step {step} holds {len(saved)} {section} leaves "
+            f"but the target structure has {len(target)} -- architecture "
+            "mismatch between save and restore")
+    diffs = []
+    for s, t in zip(saved, target):
+        if list(s["path"]) != list(t["path"]) \
+                or list(s["shape"]) != list(t["shape"]) \
+                or str(s["dtype"]) != str(t["dtype"]):
+            diffs.append(
+                f"  saved {s['path']} {s['shape']} {s['dtype']}"
+                f" != target {t['path']} {t['shape']} {t['dtype']}")
+        if len(diffs) >= 5:
+            diffs.append("  ...")
+            break
+    if diffs:
+        raise ValueError(
+            f"checkpoint step {step} {section} structure does not match the "
+            "restore target -- architecture mismatch between save and "
+            "restore:\n" + "\n".join(diffs))
+
+
+# ---------------------------------------------------------------- manifest
+def build_manifest(step: int, records: Sequence[dict], *, n_opt: int,
+                   cube_dims: dict | None = None,
+                   extra: dict | None = None) -> dict:
+    return {
+        "format": FORMAT,
+        "step": step,
+        "n_leaves": len(records),
+        "sections": {"opt": n_opt, "params": len(records) - n_opt},
+        "fingerprint": fingerprint(records),
+        "leaves": list(records),
+        "cube": dict(cube_dims) if cube_dims else None,
+        "extra": extra or {},
+    }
+
+
+def write_manifest(directory: str, manifest: dict) -> None:
+    with open(os.path.join(directory, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+
+
+def read_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, MANIFEST)) as f:
+        return json.load(f)
+
+
+def atomic_finalize(tmp: str, final: str) -> None:
+    """Publish ``tmp`` as ``final``: a reader sees the old complete
+    checkpoint or the new complete checkpoint, never a partial one."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+__all__ = [
+    "FORMAT", "MANIFEST", "atomic_finalize", "build_manifest",
+    "fingerprint", "leaf_records", "list_steps", "read_manifest",
+    "step_dir", "tree_from_records", "validate_records", "write_manifest",
+]

@@ -1,0 +1,129 @@
+"""Checkpoint data movement as recorded CommPrograms.
+
+PID-Comm's claim is that the eight collective patterns are a sufficient
+vocabulary for any cross-PE data movement (PAPER.md §IV).  Checkpoint
+traffic is exactly such movement, so it goes through the program layer
+rather than around it:
+
+* **Save** records ONE program of rooted ``gather`` collectives per
+  checkpoint section (§IV-B3: the host is the root).  The program's
+  structural fingerprint is stable across steps — same leaves, same
+  shapes — so it lowers once and every later save hits the cube's lower
+  cache.
+* **Restore** records one program of rooted ``scatter`` collectives per
+  section, each op carrying the leaf's full target PartitionSpec via the
+  ``spec=`` form.  The program is planned by ``planner.plan_program``
+  under the installed :class:`CommProfile`, and its CommEvents carry
+  ``program_id`` provenance into any live :class:`CommTrace` — elastic
+  restore is priced and traced like any other collective program.
+
+``topo`` arguments accept either a :class:`~repro.models.topology.Topology`
+or a bare :class:`~repro.core.hypercube.Hypercube` (duck-typed on
+``.cube``): the quickstart drives this layer straight from a cube.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+
+def _cube(topo):
+    return getattr(topo, "cube", topo)
+
+
+def gather_program(topo, leaves: Sequence[Any], *, name: str):
+    """Record one rooted-gather program over all cube dims: one ``gather``
+    op per leaf, inputs in leaf order, outputs the host arrays."""
+    cube = _cube(topo)
+    comm = cube.comm(cube.dim_names)
+    prog = cube.program(name=name)
+    with prog:
+        ins = [prog.input(leaf) for leaf in leaves]
+        prog.output(*[comm.gather(v) for v in ins])
+    return prog
+
+
+def scatter_program(topo, host_leaves: Sequence[Any],
+                    specs: Sequence[Any], *, name: str):
+    """Record one rooted-scatter program: one ``scatter`` op per leaf,
+    each carrying that leaf's full target PartitionSpec."""
+    if len(host_leaves) != len(specs):
+        raise ValueError(
+            f"{len(host_leaves)} leaves vs {len(specs)} placement specs")
+    cube = _cube(topo)
+    comm = cube.comm(cube.dim_names)
+    prog = cube.program(name=name)
+    with prog:
+        ins = [prog.input(a) for a in host_leaves]
+        prog.output(*[comm.scatter(v, spec=tuple(s))
+                      for v, s in zip(ins, specs)])
+    return prog
+
+
+def _as_tuple(out, n: int) -> tuple:
+    if n == 1:
+        return (out,)
+    return tuple(out)
+
+
+def execute_gather(prog, leaves: Sequence[Any]) -> list[np.ndarray]:
+    """Run a recorded gather program on the live leaves -> host arrays."""
+    if not leaves:
+        return []
+    out = prog.execute(*leaves)
+    return [np.asarray(a) for a in _as_tuple(out, len(leaves))]
+
+
+def gather_to_host(topo, leaves: Sequence[Any], *,
+                   name: str = "ckpt-gather") -> list[np.ndarray]:
+    """Record + run the rooted-gather program for ``leaves``."""
+    if not leaves:
+        return []
+    return execute_gather(gather_program(topo, leaves, name=name), leaves)
+
+
+def scatter_to_cube(topo, host_leaves: Sequence[Any],
+                    specs: Sequence[Any], *,
+                    name: str = "ckpt-scatter") -> list[jax.Array]:
+    """Record + run the rooted-scatter program: host arrays -> placed
+    device arrays under each leaf's target spec."""
+    if not host_leaves:
+        return []
+    prog = scatter_program(topo, host_leaves, specs, name=name)
+    out = prog.execute(*host_leaves)
+    return list(_as_tuple(out, len(host_leaves)))
+
+
+def flatten_specs(specs, leaves: Sequence[Any]) -> list:
+    """Flatten a spec tree in the same order as its value tree.
+
+    PartitionSpec is a tuple subclass, so a bare flatten would explode each
+    spec into its string entries; tuples are leaves here (``P()`` means
+    replicated; a ``None`` node is an empty subtree, as in jax).
+    """
+    flat, _ = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, tuple))
+    if len(flat) != len(leaves):
+        raise ValueError(
+            f"spec tree has {len(flat)} leaves, value tree has {len(leaves)}")
+    return [tuple(s) for s in flat]
+
+
+def reshard(tree, src_topo, dst_topo, specs, *, name: str = "reshard"):
+    """Move a live pytree from ``src_topo``'s cube onto ``dst_topo``'s:
+    a rooted-gather program on the source, a rooted-scatter program on the
+    target.  ``specs`` is the target-side spec tree (same structure as
+    ``tree``)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = flatten_specs(specs, leaves)
+    host = gather_to_host(src_topo, leaves, name=f"{name}-gather")
+    placed = scatter_to_cube(dst_topo, host, spec_leaves,
+                             name=f"{name}-scatter")
+    return jax.tree.unflatten(treedef, placed)
+
+
+__all__ = [
+    "execute_gather", "flatten_specs", "gather_program", "gather_to_host",
+    "reshard", "scatter_program", "scatter_to_cube",
+]

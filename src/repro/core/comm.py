@@ -488,10 +488,20 @@ class Communicator:
             x, self.cube, self.fast_dims, self.slow_dims, block=block)
 
     # ------------------------------------------------- rooted (host) four
-    def scatter(self, host_value, *, axis: int,
+    def scatter(self, host_value, *, axis: int | None = None,
+                spec: tuple | None = None,
                 algorithm: str | None = None):
         """Host -> PEs: partition ``host_value`` along ``axis`` over the
-        bound dims."""
+        bound dims, or — when ``spec`` is given instead — place it under a
+        full PartitionSpec-shaped tuple (entries ``None`` / dim name / tuple
+        of dim names per array axis).  The ``spec`` form is what elastic
+        checkpoint restore records: one rooted scatter per leaf carrying the
+        leaf's complete target sharding."""
+        if (axis is None) == (spec is None):
+            raise ValueError("scatter takes exactly one of axis= or spec=")
+        if spec is not None:
+            return self._dispatch("scatter", host_value, algorithm=algorithm,
+                                  spec=tuple(spec))
         return self._dispatch("scatter", host_value, algorithm=algorithm,
                               axis=axis)
 
@@ -777,10 +787,11 @@ def _ar_tree(comm, x, *, op):
 # runtime's native host<->device transfer *is* the in-register path, so
 # naive/pr only differ in the emulated host flow the paper ablates, not in
 # bytes placed on devices -- one body serves every registered stage.
-def _rooted_scatter(comm, host_value, *, axis):
-    ax = comm.dims
-    spec = [None] * host_value.ndim
-    spec[axis] = ax if len(ax) > 1 else ax[0]
+def _rooted_scatter(comm, host_value, *, axis=None, spec=None):
+    if spec is None:
+        ax = comm.dims
+        spec = [None] * host_value.ndim
+        spec[axis] = ax if len(ax) > 1 else ax[0]
     return jax.device_put(host_value, comm.cube.sharding(P(*spec)))
 
 

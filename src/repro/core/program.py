@@ -53,6 +53,7 @@ import dataclasses
 import hashlib
 import itertools
 import json
+import threading
 import weakref
 from typing import Any, Sequence
 
@@ -128,25 +129,35 @@ def _profile_token() -> str | None:
 # Stack of CommPrograms currently recording.  ``Communicator._dispatch``
 # consults :func:`active_program` on every call; execution temporarily
 # suspends recording so a program can be executed from inside another scope.
-_RECORDING: list["CommProgram"] = []
-_SUSPENDED = 0
+# Both the stack and the suspension counter are thread-local: a background
+# executor running a lowered program (e.g. the checkpoint gather offload)
+# must not suppress — or record into — a program being built concurrently
+# on the main thread.
+_TLS = threading.local()
+
+
+def _tls_state() -> "threading.local":
+    if not hasattr(_TLS, "recording"):
+        _TLS.recording = []  # list[CommProgram]
+        _TLS.suspended = 0
+    return _TLS
 
 
 def active_program() -> "CommProgram | None":
-    """The innermost recording scope, or None (also None mid-execution)."""
-    if _SUSPENDED or not _RECORDING:
+    """The innermost recording scope on this thread, or None (also None
+    mid-execution)."""
+    tls = _tls_state()
+    if tls.suspended or not tls.recording:
         return None
-    return _RECORDING[-1]
+    return tls.recording[-1]
 
 
 class _suspend_recording:
     def __enter__(self):
-        global _SUSPENDED
-        _SUSPENDED += 1
+        _tls_state().suspended += 1
 
     def __exit__(self, *exc):
-        global _SUSPENDED
-        _SUSPENDED -= 1
+        _tls_state().suspended -= 1
         return False
 
 
@@ -295,12 +306,12 @@ class CommProgram:
     def __enter__(self) -> "CommProgram":
         if self._closed:
             raise RuntimeError(f"{self.program_id} already recorded")
-        _RECORDING.append(self)
+        _tls_state().recording.append(self)
         self._open = True
         return self
 
     def __exit__(self, *exc):
-        _RECORDING.remove(self)
+        _tls_state().recording.remove(self)
         self._open = False
         self._closed = True
         return False

@@ -41,7 +41,7 @@ def main():
     from repro.optim import adamw
     from repro.runtime.trainer import (
         Trainer, TrainConfig, init_opt_state, make_train_step,
-        input_batch_specs)
+        input_batch_specs, opt_specs)
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -64,11 +64,21 @@ def main():
     params = init_params(cfg, topo, seed=0)
     opt = init_opt_state(params, cfg, topo, tc)
 
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    ckpt = None
+    if args.ckpt_dir:
+        # topology-bound: save gathers through one rooted-gather program,
+        # restore re-places every leaf through one rooted-scatter program
+        # planned for THIS cube -- resuming on a different mesh shape than
+        # the checkpoint was written on needs no conversion step
+        ckpt = CheckpointManager(
+            args.ckpt_dir, topo=topo,
+            specs={"params": param_specs(cfg, topo),
+                   "opt": opt_specs(cfg, topo, tc)})
     start = 0
     if ckpt and args.resume and ckpt.latest_step() is not None:
         start = ckpt.latest_step()
-        params, opt = ckpt.restore(start, params, opt)
+        st = ckpt.restore(start)
+        params, opt = st.params, st.opt
         print(f"resumed from step {start}")
 
     dc = DataConfig(seq_len=args.seq, global_batch=args.batch,

@@ -418,6 +418,13 @@ def _opt_specs(cfg, topo, tc: TrainConfig):
     return specs
 
 
+def opt_specs(cfg, topo, tc: TrainConfig):
+    """Placement specs for :func:`init_opt_state`'s tree -- the opt half of
+    a topology-bound :class:`~repro.checkpoint.CheckpointManager`'s
+    ``specs={"params": ..., "opt": ...}`` binding."""
+    return _opt_specs(cfg, topo, tc)
+
+
 def opt_structs(cfg, topo, tc: TrainConfig):
     defs = param_defs(cfg, topo)
     sd = adamw.state_defs(defs, tc.adamw,
@@ -568,5 +575,11 @@ class Trainer:
                     f"gnorm={metrics['grad_norm']:.3f} {dt*1e3:.0f}ms")
             if (checkpoint_every and self.checkpointer
                     and step % checkpoint_every == 0):
-                self.checkpointer.save(step, params, opt_state)
+                # gather-at-dispatch: save() snapshots params/opt to host
+                # before returning (the jitted step donates both buffers),
+                # then overlaps serialization + disk writes with the next
+                # steps
+                from repro.checkpoint.manager import TrainState
+                self.checkpointer.save(
+                    step, TrainState(params=params, opt=opt_state))
         return params, opt_state, history

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import threading
 import time
 
 _ACTIVE: list["Tracer"] = []
@@ -62,15 +63,23 @@ def maybe_instant(name: str, **args) -> None:
 
 
 class _Span:
-    __slots__ = ("name", "cat", "args", "ts", "dur", "depth", "ph")
+    __slots__ = ("name", "cat", "args", "ts", "dur", "depth", "ph", "tid")
 
-    def __init__(self, name, cat, args, ts, depth, ph="X", dur=0.0):
+    def __init__(self, name, cat, args, ts, depth, ph="X", dur=0.0, tid=1):
         self.name, self.cat, self.args = name, cat, args
         self.ts, self.dur, self.depth, self.ph = ts, dur, depth, ph
+        self.tid = tid
 
 
 class Tracer:
     """Records nested spans; context manager.
+
+    Thread-aware: each OS thread gets its own open-span stack and its own
+    exported ``tid`` lane (the thread that entered the tracer keeps the
+    constructor's ``tid``; later threads get the next integers in first-use
+    order), so background workers — e.g. the checkpoint save executor —
+    can begin/end spans concurrently with the main loop without corrupting
+    its nesting.  ``end()`` must be called on the span's own thread.
 
     Parameters
     ----------
@@ -85,14 +94,38 @@ class Tracer:
         self.clock = clock if clock is not None else time.perf_counter
         self.pid, self.tid = pid, tid
         self._t0: float | None = None
-        self._stack: list[_Span] = []
+        self._stacks: dict[int, list[_Span]] = {}
+        self._tids: dict[int, int] = {}
+        self._lock = threading.Lock()
         self._events: list[_Span] = []
         self.comm_events: list = []
+
+    @property
+    def _stack(self) -> list[_Span]:
+        """This thread's open-span stack."""
+        ident = threading.get_ident()
+        stack = self._stacks.get(ident)
+        if stack is None:
+            stack = self._stacks.setdefault(ident, [])
+        return stack
+
+    def _tid_here(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.get(ident)
+                if tid is None:
+                    tid = self.tid if not self._tids \
+                        else max(self._tids.values()) + 1
+                    self._tids[ident] = tid
+        return tid
 
     # ------------------------------------------------------------ lifecycle
     def __enter__(self) -> "Tracer":
         if self._t0 is None:
             self._t0 = self.clock()
+        self._tid_here()  # the entering thread claims the base tid lane
         _ACTIVE.append(self)
         # Register on the comm trace stack so live CommEvents flow in.
         # Imported lazily: telemetry must stay importable without jax.
@@ -114,18 +147,21 @@ class Tracer:
 
     # ------------------------------------------------------------ recording
     def begin(self, name: str, cat: str = "wall", **args) -> _Span:
-        sp = _Span(name, cat, args, self._now_us(), len(self._stack))
-        self._stack.append(sp)
+        stack = self._stack
+        sp = _Span(name, cat, args, self._now_us(), len(stack),
+                   tid=self._tid_here())
+        stack.append(sp)
         return sp
 
     def end(self, handle: _Span) -> None:
-        while self._stack:
-            sp = self._stack.pop()
+        stack = self._stack
+        while stack:
+            sp = stack.pop()
             sp.dur = round(self._now_us() - sp.ts, 3)
             self._events.append(sp)
             if sp is handle:
                 return
-        raise RuntimeError(f"span {handle.name!r} is not open")
+        raise RuntimeError(f"span {handle.name!r} is not open on this thread")
 
     @contextlib.contextmanager
     def span(self, name: str, cat: str = "wall", **args):
@@ -137,7 +173,8 @@ class Tracer:
 
     def instant(self, name: str, **args) -> None:
         self._events.append(_Span(name, "annotation", args,
-                                  self._now_us(), len(self._stack), ph="i"))
+                                  self._now_us(), len(self._stack), ph="i",
+                                  tid=self._tid_here()))
 
     def record(self, event) -> None:
         """CommTrace duck-type hook: ingest a live CommEvent as a child
@@ -159,7 +196,8 @@ class Tracer:
         }
         self._events.append(_Span(
             f"comm:{event.primitive}", "comm", args, self._now_us(),
-            len(self._stack) + 1, dur=round(event.seconds * 1e6, 3)))
+            len(self._stack) + 1, dur=round(event.seconds * 1e6, 3),
+            tid=self._tid_here()))
 
     # -------------------------------------------------------------- exports
     def finished(self) -> list:
@@ -170,7 +208,7 @@ class Tracer:
         events = []
         for sp in self.finished():
             ev = {"name": sp.name, "cat": sp.cat, "ph": sp.ph,
-                  "ts": sp.ts, "pid": self.pid, "tid": self.tid,
+                  "ts": sp.ts, "pid": self.pid, "tid": sp.tid,
                   "args": sp.args}
             if sp.ph == "X":
                 ev["dur"] = sp.dur

@@ -168,3 +168,48 @@ def broadcast(host_value: np.ndarray, cube_shape: Sequence[int]
     cube_shape = tuple(int(s) for s in cube_shape)
     return np.broadcast_to(
         host_value, cube_shape + host_value.shape).copy()
+
+
+# ------------------------------------------------------- reshard (checkpoint)
+def placed_shard(x: np.ndarray, cube_shape: Sequence[int],
+                 dim_names: Sequence[str], spec, coords: Sequence[int]
+                 ) -> np.ndarray:
+    """The block PE ``coords`` holds of the *global* array ``x`` under a
+    PartitionSpec-shaped ``spec`` (one entry per array axis: ``None`` /
+    dim name / tuple of dim names, missing trailing axes replicated).
+
+    This is the pure-NumPy reshard oracle for elastic checkpoint restore:
+    a checkpoint holds the global value, and a restore onto any cube must
+    leave exactly this block on each PE.  Multi-name entries linearize
+    cube-major (outer dim varies slowest), matching ``NamedSharding``.
+    """
+    cube_shape = tuple(int(s) for s in cube_shape)
+    sizes = dict(zip(dim_names, cube_shape))
+    pos = dict(zip(dim_names, (int(c) for c in coords)))
+    entries = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
+    idx = []
+    for axis, entry in enumerate(entries):
+        names = () if entry is None else (
+            (entry,) if isinstance(entry, str) else tuple(entry))
+        groups = 1
+        rank = 0
+        for n in names:
+            groups *= sizes[n]
+            rank = rank * sizes[n] + pos[n]
+        if x.shape[axis] % groups:
+            raise ValueError(
+                f"axis {axis} of {x.shape} not divisible by {groups} "
+                f"(spec entry {entry!r})")
+        block = x.shape[axis] // groups
+        idx.append(slice(rank * block, (rank + 1) * block))
+    return x[tuple(idx)]
+
+
+def reshard(x: np.ndarray, cube_shape: Sequence[int],
+            dim_names: Sequence[str], spec) -> dict:
+    """Every PE's block of ``x`` on the target cube: ``coords -> shard``.
+    The full placement map an elastic restore must realize."""
+    cube_shape = tuple(int(s) for s in cube_shape)
+    return {tuple(int(c) for c in coords):
+            placed_shard(x, cube_shape, dim_names, spec, coords)
+            for coords in np.ndindex(*cube_shape)}
